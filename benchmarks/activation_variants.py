@@ -1,0 +1,47 @@
+"""RQ1 table: activation-implementation variants across both backends —
+precision vs resources (FPGA LUT/BRAM/cycles) vs VPU cost (TPU), plus
+measured wall-time of the Pallas kernels (interpret mode, relative only)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fpga import ACT_BRAM_KB, ACT_CYCLES, ACT_LUT
+from repro.kernels.ops import activation
+from repro.models.activations import VARIANT_COST, VARIANT_ERROR, get_sigmoid
+
+IMPLS = ("exact", "pwl", "lut", "hard")
+
+
+def measured_error(impl: str) -> float:
+    x = jnp.linspace(-8.0, 8.0, 20001)
+    return float(jnp.max(jnp.abs(get_sigmoid(impl)(x) - jax.nn.sigmoid(x))))
+
+
+def kernel_us(impl: str, iters: int = 5) -> float:
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 256), jnp.float32)
+    activation(x, fn="sigmoid", impl=impl).block_until_ready()  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        activation(x, fn="sigmoid", impl=impl).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> dict:
+    print(f"{'impl':>6s} {'max err':>9s} {'bound':>9s} "
+          f"{'FPGA cyc':>9s} {'LUT':>5s} {'BRAM kb':>8s} {'VPU ops':>8s} {'kern µs*':>9s}")
+    derived = {}
+    for impl in IMPLS:
+        err = measured_error(impl)
+        us = kernel_us(impl)
+        print(f"{impl:>6s} {err:9.2e} {VARIANT_ERROR[impl]:9.2e} "
+              f"{ACT_CYCLES[impl]:9d} {ACT_LUT[impl]:5d} {ACT_BRAM_KB[impl]:8d} "
+              f"{VARIANT_COST[impl]:8.1f} {us:9.1f}")
+        assert err <= VARIANT_ERROR[impl] * 1.05 + 1e-12, (impl, err)
+        derived[f"err_{impl}"] = err
+    print("* interpret-mode walltime — relative ordering only, not TPU time")
+    return derived
+
+
+if __name__ == "__main__":
+    run()

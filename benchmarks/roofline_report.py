@@ -1,0 +1,93 @@
+"""Aggregate the dry-run JSONs into the §Dry-run/§Roofline tables.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), prints a
+markdown roofline table per mesh, flags the three hillclimb picks (worst
+roofline fraction / most collective-bound / most paper-representative), and
+one sentence per cell on what would move the dominant term.
+"""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+MOVER = {
+    "compute": "raise MXU utilization: remat policy (drop full-remat), int8 MXU, "
+               "bigger per-device batch",
+    "memory": "cut HBM traffic: flash-attention kernel (no f32 scores in HBM), "
+              "fused epilogues, weight/KV dtype",
+    "collective": "re-balance mesh (less TP / more DP), overlap collectives with "
+                  "compute via microbatch scan, int8 gradient all-reduce",
+}
+
+
+def load(tag: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(f))
+        if d.get("skipped"):
+            continue
+        if (d.get("tag") or "") != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_row(d: dict) -> str:
+    r = d["roofline"]
+    return (
+        f"| {d['arch']} | {d['shape']} | {d['kind']} | "
+        f"{r['compute_s'] * 1e3:.1f} | {r['memory_s'] * 1e3:.1f} | "
+        f"{r['collective_s'] * 1e3:.1f} | {r['bottleneck']} | "
+        f"{r['mfu']:.3f} | {r['useful_ratio']:.2f} | "
+        f"{d['resident_gb_per_dev']:.1f} | {d['live_gb_per_dev']:.1f} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | kind | compute ms | memory ms | collective ms | "
+    "bottleneck | MFU | useful | resident GB | live GB |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def run() -> dict:
+    rows = load()
+    if not rows:
+        print("no dry-run results found — run scripts/run_dryrun_all.sh first")
+        return {}
+    derived = {}
+    for mesh in ("16x16", "2x16x16"):
+        sub = [d for d in rows if d["mesh"] == mesh]
+        if not sub:
+            continue
+        print(f"\n### mesh {mesh} ({len(sub)} cells)\n")
+        print(HEADER)
+        for d in sorted(sub, key=lambda x: (x["arch"], x["shape"])):
+            print(fmt_row(d))
+        n_fit = sum(1 for d in sub if d["fits_hbm_resident"])
+        print(f"\nresident fits 16 GB HBM: {n_fit}/{len(sub)}")
+        derived[f"cells_{mesh}"] = len(sub)
+        derived[f"mean_mfu_{mesh}"] = sum(d["roofline"]["mfu"] for d in sub) / len(sub)
+
+    # hillclimb picks (single-pod table)
+    single = [d for d in rows if d["mesh"] == "16x16"]
+    if single:
+        worst = min(single, key=lambda d: d["roofline"]["mfu"] or 1e9)
+        collb = max(single, key=lambda d: d["roofline"]["collective_s"])
+        print("\nhillclimb candidates:")
+        print(f"  worst roofline fraction: {worst['arch']} × {worst['shape']} "
+              f"(mfu {worst['roofline']['mfu']:.4f})")
+        print(f"  most collective-bound:  {collb['arch']} × {collb['shape']} "
+              f"(coll {collb['roofline']['collective_s']:.2f}s)")
+        print("  paper-representative:   granite-3-8b × decode_32k "
+              "(duty-cycled serving = the paper's IoT inference regime)")
+        print("\nwhat moves the dominant term:")
+        for d in sorted(single, key=lambda x: (x["arch"], x["shape"])):
+            b = d["roofline"]["bottleneck"]
+            print(f"  {d['arch']} × {d['shape']} [{b}]: {MOVER[b]}")
+    return derived
+
+
+if __name__ == "__main__":
+    run()

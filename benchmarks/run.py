@@ -1,0 +1,45 @@
+"""Benchmark driver: one function per paper table (+ TPU extensions).
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end (us_per_call =
+wall time of the whole table computation; derived = the table's headline
+reproduced number).
+"""
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        activation_variants,
+        adaptive_threshold,
+        generator_fpga,
+        generator_tpu,
+        paper_lstm,
+        roofline_report,
+        workload_strategies,
+    )
+
+    benches = [
+        ("paper_lstm_C1_C2", paper_lstm),
+        ("workload_strategies_C3", workload_strategies),
+        ("adaptive_threshold_C4", adaptive_threshold),
+        ("activation_variants_RQ1", activation_variants),
+        ("generator_fpga_RQ3", generator_fpga),
+        ("generator_tpu_beyond", generator_tpu),
+        ("roofline_report", roofline_report),
+    ]
+    rows = []
+    for name, mod in benches:
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.perf_counter()
+        derived = mod.run() or {}
+        us = (time.perf_counter() - t0) * 1e6
+        headline = next(iter(derived.items()), ("", float("nan")))
+        rows.append((name, us, f"{headline[0]}={headline[1]:.4g}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end training driver: a ~100M-parameter granite-family LM trained
+for a few hundred steps on the synthetic bigram stream, with checkpointing,
+an injected mid-run worker failure (restart + deterministic replay), and a
+loss that must fall well below the unigram floor.
+
+Full run (~100M params, a few hundred steps — minutes to hours on CPU):
+    PYTHONPATH=src python examples/train_lm.py
+Quick run (~4M params, 120 steps — CI-sized):
+    PYTHONPATH=src python examples/train_lm.py --quick
+"""
+import argparse
+import dataclasses
+import math
+import shutil
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import SyntheticLM
+from repro.training.train_loop import Trainer, TrainerConfig
+
+
+def model_100m() -> ArchConfig:
+    """Granite-family dense LM, ~100M params (20L × 640d × 1720ff)."""
+    return ArchConfig(
+        name="granite-100m", family="dense", num_layers=20, d_model=640,
+        num_heads=10, num_kv_heads=2, d_ff=1720, vocab_size=8192,
+        remat="none", scan_layers=True,
+    )
+
+
+def model_quick() -> ArchConfig:
+    return ArchConfig(
+        name="granite-4m", family="dense", num_layers=4, d_model=192,
+        num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=1024,
+        remat="none",
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", type=int, default=-1,
+                    help="step at which to inject a WorkerFailure (-1 = steps//2)")
+    args = ap.parse_args()
+
+    cfg = model_quick() if args.quick else model_100m()
+    steps = args.steps or (300 if args.quick else 300)
+    batch, seq = (16, 128) if args.quick else (16, 256)
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+                     seed=0, branching=4)
+    tc = TrainerConfig(
+        num_steps=steps, checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=max(steps // 6, 10), log_every=max(steps // 15, 1),
+        peak_lr=3e-3, warmup_steps=max(steps // 15, 5),
+    )
+    trainer = Trainer(cfg, ds, tc)
+    n_params = cfg.param_count()
+    print(f"{cfg.name}: {n_params / 1e6:.1f}M params, {steps} steps, "
+          f"batch {batch}×{seq} tokens")
+
+    fail_at = args.inject_failure if args.inject_failure >= 0 else steps // 2
+    trainer._failure_at = fail_at
+    print(f"(worker failure injected at step {fail_at}; expect restore+replay)")
+
+    stats = trainer.run()
+    floor_bits = math.log(4)  # nats: bigram chain has 4 successors/token
+    uni = math.log(cfg.vocab_size)
+    print(f"\nrestarts: {stats['restarts']}")
+    print(f"{'step':>6s} {'loss':>8s} {'grad':>8s} {'lr':>9s} {'s/step':>7s}")
+    for m in stats["metrics"]:
+        print(f"{m['step']:6d} {m['loss']:8.4f} {m['grad_norm']:8.2f} "
+              f"{m['lr']:9.2e} {m['time_s']:7.2f}")
+    final = stats["metrics"][-1]["loss"]
+    print(f"\nuniform loss = ln V = {uni:.2f}; bigram floor = ln 4 = {floor_bits:.2f}; "
+          f"final = {final:.3f}")
+    ok = final < 0.6 * uni
+    print("loss fell well below the uniform entropy ✓" if ok
+          else "WARNING: loss did not fall enough")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

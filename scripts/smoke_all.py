@@ -1,0 +1,51 @@
+"""Quick dev smoke: every reduced arch through train_loss / prefill / decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config, list_archs
+from repro.models.model import decode_step, init_model, prefill, train_loss
+from repro.serving.kv_cache import cache_defs
+from repro.models.params import init_params
+
+B, S = 2, 64
+
+
+def run(name: str) -> None:
+    cfg = get_reduced_config(name)
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jnp.ones((B, cfg.frontend_seq, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "audio":
+        batch["frontend_embeds"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    loss, metrics = jax.jit(lambda p, b: train_loss(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+
+    logits, cache = jax.jit(
+        lambda p, t, f: prefill(p, t, cfg, frontend_embeds=f)
+    )(params, batch["tokens"], batch.get("frontend_embeds"))
+    assert logits.shape == (B, cfg.padded_vocab), (name, logits.shape)
+    assert jnp.isfinite(logits[:, : cfg.vocab_size]).all(), name
+
+    # decode one token against a fresh max_len=S cache
+    fresh = init_params(cache_defs(cfg, batch=B, max_len=S), key)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, c, t, pos: decode_step(p, c, t, pos, cfg)
+    )(params, fresh, tok, jnp.int32(0))
+    assert logits2.shape == (B, cfg.padded_vocab), (name, logits2.shape)
+    assert jnp.isfinite(logits2[:, : cfg.vocab_size]).all(), name
+    print(f"  {name}: loss={float(loss):.3f} OK")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list_archs()
+    for n in names:
+        run(n)
+    print("ALL OK")

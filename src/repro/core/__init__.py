@@ -1,0 +1,7 @@
+"""The paper's primary contribution: the energy-efficient accelerator
+Generator — design-point space, application constraints, analytical cost
+models (FPGA paper-faithful + TPU roofline), workload-aware strategies, and
+the explore/estimate/prune search."""
+from repro.core.candidates import DesignPoint, DesignSpace, Estimate, pareto_front  # noqa: F401
+from repro.core.constraints import ApplicationSpec  # noqa: F401
+from repro.core.generator import Generator, GeneratorResult, ScoredCandidate  # noqa: F401

@@ -1,0 +1,198 @@
+"""Post-GSPMD HLO analysis: collective-traffic extraction.
+
+``cost_analysis()`` has no collective-bytes entry, so the dry-run parses the
+compiled module text and sums the *operand* sizes of every communication op
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+sync and async ``-start`` forms).
+
+Two subtleties handled here:
+
+  * Compiled HLO prints operand references bare (``%dot``); operand bytes
+    are derived from the typed RESULT shape + op semantics:
+      all-reduce / all-to-all / collective-permute   operand = result
+      all-gather                                     operand = result / group
+      reduce-scatter                                 operand = result × group
+    (group = participants per replica group, from ``replica_groups``).
+
+  * ``lax.scan`` lowers to a ``while`` loop, so a scanned layer stack's
+    collectives appear ONCE in the text. The analyzer splits the module into
+    computations, builds the call graph (while bodies, fusions, calls,
+    conditionals), reads each while's ``known_trip_count`` backend config,
+    and multiplies nested collective bytes accordingly — per-step traffic,
+    not per-loop-body.
+
+The same while-once issue afflicts cost_analysis FLOPs/bytes, which is why
+the dry-run takes those from an UNROLLED lowering instead (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+_INSTR_RE = re.compile(
+    r"%[\w.\-]+\s*=\s*(\([^=]*?\)|[\w\[\],{}\s]+?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred|token)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_RE = re.compile(r"\bwhile\(.*?\bbody=%?([\w.\-]+)")
+_CALLEE_RES = (
+    re.compile(r"\bcalls=%?([\w.\-]+)"),
+    re.compile(r"\bto_apply=%?([\w.\-]+)"),
+    re.compile(r"\bbranch_computations=\{([^}]*)\}"),
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [groups, per_group]<=[total]
+    m = _LIST_GROUPS_RE.search(line)
+    if m and m.group(1):
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    operand_bytes: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "by_op": {
+                k: {"count": self.counts[k], "operand_bytes": self.operand_bytes[k]}
+                for k in sorted(self.counts)
+            },
+        }
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str | None]:
+    """{computation name: [instruction lines]}, entry computation name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: list[str] | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                name = m.group(1)
+                comps[name] = cur = []
+                if stripped.startswith("ENTRY"):
+                    entry = name
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                cur.append(stripped)
+    return comps, entry
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective operand bytes, while-loop trip counts applied."""
+    comps, entry = _split_computations(hlo_text)
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def analyze(name: str, stack: frozenset = frozenset()) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}, {}
+        counts: dict = defaultdict(int)
+        bytes_: dict = defaultdict(int)
+        stack = stack | {name}
+        for line in comps[name]:
+            m = _INSTR_RE.search(line)
+            if m:
+                result_type, kind, suffix = m.group(1), m.group(2), m.group(3)
+                if suffix != "-done":
+                    result = sum(
+                        _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_type)
+                    )
+                    g = _group_size(line)
+                    if kind == "all-gather":
+                        operand = result // max(g, 1)
+                    elif kind == "reduce-scatter":
+                        operand = result * g
+                    else:
+                        operand = result
+                    counts[kind] += 1
+                    bytes_[kind] += operand
+            # nested computations
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                sub_c, sub_b = analyze(wm.group(1), stack)
+                for k in sub_c:
+                    counts[k] += trip * sub_c[k]
+                    bytes_[k] += trip * sub_b[k]
+                continue
+            for cre in _CALLEE_RES:
+                cm = cre.search(line)
+                if cm:
+                    for callee in re.findall(r"%?([\w.\-]+)", cm.group(1)):
+                        sub_c, sub_b = analyze(callee, stack)
+                        for k in sub_c:
+                            counts[k] += sub_c[k]
+                            bytes_[k] += sub_b[k]
+        memo[name] = (dict(counts), dict(bytes_))
+        return memo[name]
+
+    if entry is None:
+        # fallback: flat scan, no loop scaling
+        counts, bytes_ = defaultdict(int), defaultdict(int)
+        for line in hlo_text.splitlines():
+            m = _INSTR_RE.search(line)
+            if not m or m.group(3) == "-done":
+                continue
+            result = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(m.group(1)))
+            g = _group_size(line)
+            kind = m.group(2)
+            operand = result // max(g, 1) if kind == "all-gather" else (
+                result * g if kind == "reduce-scatter" else result
+            )
+            counts[kind] += 1
+            bytes_[kind] += operand
+        return CollectiveStats(dict(counts), dict(bytes_))
+
+    counts, bytes_ = analyze(entry)
+    return CollectiveStats(dict(counts), dict(bytes_))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    return [int(m.group(1)) for m in _TRIP_RE.finditer(hlo_text)]

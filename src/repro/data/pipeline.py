@@ -1,0 +1,102 @@
+"""Deterministic synthetic LM data pipeline (host-sharded, restart-replayable).
+
+Sequences are drawn from a fixed random bigram chain (seeded at dataset
+construction), so the data has learnable structure — a ~100M model's loss
+drops well below the unigram entropy within a few hundred steps
+(examples/train_lm.py). Every batch is a pure function of ``(seed, step,
+host)``: after a failure+restore, replaying from the checkpointed step
+reproduces the exact token stream (fault-tolerance requirement — no data
+loss or duplication across restarts).
+
+``frontend_embeds`` stubs ([vlm]/[audio] archs) are deterministic PRNG
+tensors keyed the same way; label positions covered by the stub are masked
+with -1 (ignored by the masked CE).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    """Bigram-chain token source.
+
+    Successors are CLASS-structured (token t's successor set depends on
+    ``t % num_classes``): the optimal logit table then has rank ≤
+    num_classes, so any model with d_model ≳ num_classes can reach the
+    conditional-entropy floor (ln branching). A fully random chain over V
+    tokens would need rank-V logits — unlearnable through a d_model
+    bottleneck no matter how long you train (and unlike language, whose
+    bigram statistics are low-rank)."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    num_hosts: int = 1
+    branching: int = 4   # successors per class — entropy knob (~log2(b) bits)
+    num_classes: int = 64  # rank of the optimal logit table
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_hosts == 0, (self.global_batch, self.num_hosts)
+
+    @property
+    def host_batch(self) -> int:
+        return self.global_batch // self.num_hosts
+
+    def _chain(self) -> np.ndarray:
+        """(V, branching) successor table, fixed for the dataset's lifetime."""
+        rng = np.random.default_rng(self.seed)
+        k = min(self.num_classes, self.vocab_size)
+        class_succ = rng.integers(0, self.vocab_size, size=(k, self.branching))
+        classes = np.arange(self.vocab_size) % k
+        return class_succ[classes]
+
+    def batch(self, step: int, host: int = 0) -> dict:
+        """Tokens+labels for one host at one step. Pure in (seed, step, host)."""
+        assert 0 <= host < self.num_hosts
+        chain = self._chain()
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, host, 0xDA7A])
+        )
+        b, s = self.host_batch, self.seq_len
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab_size, size=b)
+        draws = rng.integers(0, self.branching, size=(b, s))
+        for t in range(s):
+            toks[:, t + 1] = chain[toks[:, t], draws[:, t]]
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+
+def make_batch(cfg: ArchConfig, ds: SyntheticLM, step: int, host: int = 0) -> dict:
+    """Arch-aware batch: adds frontend stubs + label masking where needed."""
+    out = ds.batch(step, host)
+    key = jax.random.PRNGKey(hash((ds.seed, step, host, 1)) & 0x7FFFFFFF)
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = 0.02 * jax.random.normal(
+            key, (ds.host_batch, cfg.frontend_seq, cfg.d_model), cfg.dtype
+        )
+        out["labels"] = out["labels"].at[:, : cfg.frontend_seq].set(-1)
+    elif cfg.frontend == "audio":
+        out["frontend_embeds"] = 0.02 * jax.random.normal(
+            key, (ds.host_batch, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    return out
+
+
+def unigram_entropy_bits(ds: SyntheticLM) -> float:
+    """Entropy of the bigram chain's conditional (log2 branching) — the loss
+    floor a perfect model reaches; the unconditional floor is log2(V)."""
+    import math
+
+    return math.log2(ds.branching)

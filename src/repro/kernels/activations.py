@@ -1,0 +1,137 @@
+"""Pallas TPU kernels for the activation-implementation variants (RQ1).
+
+The FPGA RTL templates trade LUT/DSP resources against precision; the TPU
+adaptation trades VPU passes (and for the LUT variant, one tiny MXU matmul)
+against precision:
+
+  exact — transcendental exp on the VPU (multiple passes)
+  pwl   — PLAN piecewise-linear: compare chain + FMA (cheap VPU)
+  lut   — 256-entry table lookup realized as a one-hot MXU matmul
+          (TPU has no efficient VMEM gather; a (n,256)×(256,1) matmul IS the
+          TPU-native LUT — the systolic array plays the role of BRAM)
+  hard  — clip + FMA only (min/max units)
+
+Tiles are (block_rows, lane)-shaped VMEM blocks; the grid walks the row dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.models.activations import LUT_RANGE, LUT_SIZE
+
+
+def _sigmoid_exact(x):
+    return jax.nn.sigmoid(x)
+
+
+def _sigmoid_pwl(x):
+    a = jnp.abs(x)
+    y = jnp.where(
+        a >= 5.0,
+        1.0,
+        jnp.where(
+            a >= 2.375,
+            0.03125 * a + 0.84375,
+            jnp.where(a >= 1.0, 0.125 * a + 0.625, 0.25 * a + 0.5),
+        ),
+    )
+    return jnp.where(x >= 0, y, 1.0 - y)
+
+
+def _sigmoid_hard(x):
+    return jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def _lut_lookup(x, table):
+    """One-hot MXU gather over the HALF-RANGE σ table ([0, 8], 256 entries)
+    with sign reflection — idx (n,) → onehot (n, LUT_SIZE) @ table. TPU has
+    no efficient VMEM gather; the (n,256)×(256,1) matmul IS the TPU-native
+    LUT (the systolic array plays the role of BRAM)."""
+    a = jnp.clip(jnp.abs(x), 0.0, LUT_RANGE)
+    idx = jnp.round(a / LUT_RANGE * (LUT_SIZE - 1)).astype(jnp.int32)
+    onehot = (idx[..., None] == jnp.arange(LUT_SIZE)[None, None, :]).astype(jnp.float32)
+    y = jax.lax.dot_general(
+        onehot.reshape(-1, LUT_SIZE),
+        table.reshape(LUT_SIZE, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(x.shape)
+    return jnp.where(x >= 0, y, 1.0 - y)
+
+
+def _apply_variant(x, impl: str, fn: str, table):
+    xf = x.astype(jnp.float32)
+    arg = 2.0 * xf if fn == "tanh" else xf  # tanh(x) = 2σ(2x) − 1
+    if impl == "exact":
+        s = _sigmoid_exact(arg)
+    elif impl == "pwl":
+        s = _sigmoid_pwl(arg)
+    elif impl == "hard":
+        if fn == "tanh":
+            return jnp.clip(xf, -1.0, 1.0)
+        s = _sigmoid_hard(arg)
+    elif impl == "lut":
+        s = _lut_lookup(arg, table)
+    else:
+        raise ValueError(impl)
+    return 2.0 * s - 1.0 if fn == "tanh" else s
+
+
+def _kernel(x_ref, table_ref, o_ref, *, impl: str, fn: str):
+    x = x_ref[...]
+    table = table_ref[...]
+    base = "sigmoid" if fn == "silu" else ("tanh" if fn == "gelu" else fn)
+    xf = x.astype(jnp.float32)
+    if fn == "silu":
+        y = xf * _apply_variant(x, impl, "sigmoid", table)
+    elif fn == "gelu":
+        c = 0.7978845608028654
+        inner = c * (xf + 0.044715 * xf * xf * xf)
+        y = 0.5 * xf * (1.0 + _apply_variant(inner, impl, "tanh", table))
+    else:
+        y = _apply_variant(x, impl, base, table)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _sigmoid_table():
+    grid = jnp.linspace(0.0, LUT_RANGE, LUT_SIZE, dtype=jnp.float32)  # half-range
+    return jax.nn.sigmoid(grid)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "impl", "block_rows", "interpret"))
+def activation(x, *, fn: str = "sigmoid", impl: str = "exact",
+               block_rows: int = 256, interpret: bool = True):
+    """Elementwise activation variant as a Pallas kernel.
+
+    x is treated as (rows, lanes) after flattening; rows are tiled in VMEM
+    blocks of ``block_rows``. Lane dim should be a multiple of 128 on real
+    TPU (any size works in interpret mode).
+    """
+    shape = x.shape
+    lanes = shape[-1]
+    x2 = x.reshape(-1, lanes)
+    rows = x2.shape[0]
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    padded_rows = x2.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, impl=impl, fn=fn),
+        grid=(padded_rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((LUT_SIZE,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, lanes), x.dtype),
+        interpret=interpret,
+    )(x2, _sigmoid_table())
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,106 @@
+"""Blocked online-softmax ("flash") attention for TPU, with GQA.
+
+TPU adaptation of the paper's "optimized template" idea applied to the
+attention hot-spot: instead of CUDA warp tiling, blocks are VMEM tiles sized
+for the MXU (q/kv block × head_dim, multiples of 128 on hardware), and the
+KV loop is the *innermost sequential grid axis* — on TPU the grid executes
+sequentially per core, so VMEM scratch accumulators carry the online-softmax
+state (m, l, acc) across KV steps; ``@pl.when`` gates init (first KV step)
+and write-out (last KV step).
+
+Layouts: q (B, H, Sq, D); k/v (B, KV, Sk, D); GQA ratio g = H // KV resolved
+in the k/v index_map (q head h reads kv head h // g).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+LANES = 128  # f32 scratch min lane width on TPU
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, block_q: int, block_k: int, num_k: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        qi = pl.program_id(2)
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]  # (bq, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == num_k - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0, ...] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) → (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    num_k = sk // bk
+    scale = 1.0 / (d ** 0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=bq, block_k=bk, num_k=num_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, num_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

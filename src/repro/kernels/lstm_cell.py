@@ -1,0 +1,97 @@
+"""Fused LSTM cell — Pallas TPU port of the paper's optimized RTL template.
+
+The paper's C1/C2 win (−47% latency, 2.33× GOPS/W) comes from (a) computing
+all four gate pre-activations as ONE pipelined matmul and (b) cheap gate
+activations (RQ1 variants). On TPU that maps to:
+
+  * one MXU matmul of x against the (D, 4H) weight + one of h against (H, 4H)
+    — all four gates in a single systolic pass each (the "pipelining"),
+  * the gate nonlinearities fused into the VPU epilogue of the same kernel
+    (no HBM round-trip between matmul and activations),
+  * the activation-impl axis (exact/pwl/lut/hard) selected at trace time.
+
+Grid walks batch blocks; weights stay resident in VMEM across the grid
+(embedded-scale LSTMs: D, H ≤ a few hundred — the whole working set fits,
+mirroring the paper's on-chip BRAM residency).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.activations import _apply_variant, _sigmoid_table
+
+
+def _kernel(x_ref, h_ref, c_ref, w_ref, u_ref, b_ref, table_ref,
+            h_out_ref, c_out_ref, *, impl: str, hidden: int):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    table = table_ref[...]
+
+    z = (
+        jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(h, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        + b[None, :]
+    )
+    zi = z[:, :hidden]
+    zf = z[:, hidden : 2 * hidden]
+    zg = z[:, 2 * hidden : 3 * hidden]
+    zo = z[:, 3 * hidden :]
+    i = _apply_variant(zi, impl, "sigmoid", table)
+    f = _apply_variant(zf, impl, "sigmoid", table)
+    g = _apply_variant(zg, impl, "tanh", table)
+    o = _apply_variant(zo, impl, "sigmoid", table)
+    c_new = f * c + i * g
+    h_new = o * _apply_variant(c_new, impl, "tanh", table)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_b", "interpret"))
+def lstm_cell_fused(x, h, c, w, u, b, *, impl: str = "exact",
+                    block_b: int = 128, interpret: bool = True):
+    """x: (B, D); h/c: (B, H); w: (D, 4H); u: (H, 4H); b: (4H,)."""
+    bsz, d = x.shape
+    hidden = h.shape[1]
+    bb = min(block_b, bsz)
+    pad = (-bsz) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    pb = x.shape[0]
+    from repro.kernels.activations import LUT_SIZE
+
+    kernel = functools.partial(_kernel, impl=impl, hidden=hidden)
+    h_new, c_new = pl.pallas_call(
+        kernel,
+        grid=(pb // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((d, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hidden,), lambda i: (0,)),
+            pl.BlockSpec((LUT_SIZE,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pb, hidden), x.dtype),
+            jax.ShapeDtypeStruct((pb, hidden), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, h, c, w, u, b, _sigmoid_table())
+    if pad:
+        h_new, c_new = h_new[:bsz], c_new[:bsz]
+    return h_new, c_new

@@ -1,0 +1,43 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``INTERPRET`` defaults to True (this container is CPU-only; interpret mode
+executes the kernel bodies in Python for correctness validation). On real
+TPU set ``repro.kernels.ops.INTERPRET = False`` (or the REPRO_INTERPRET env
+var) and the same calls lower through Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.activations import activation as _activation
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.int8_matmul import int8_matmul as _int8_matmul
+from repro.kernels.lstm_cell import lstm_cell_fused as _lstm_cell
+from repro.kernels.ref import quantize_colwise, quantize_rowwise
+
+INTERPRET = os.environ.get("REPRO_INTERPRET", "1") != "0"
+
+
+def activation(x, *, fn: str = "sigmoid", impl: str = "exact", block_rows: int = 256):
+    return _activation(x, fn=fn, impl=impl, block_rows=block_rows, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512, block_k: int = 512):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=INTERPRET)
+
+
+def lstm_cell(x, h, c, w, u, b, *, impl: str = "exact", block_b: int = 128):
+    return _lstm_cell(x, h, c, w, u, b, impl=impl, block_b=block_b, interpret=INTERPRET)
+
+
+def int8_matmul(x_q, w_q, x_scale, w_scale, **kw):
+    return _int8_matmul(x_q, w_q, x_scale, w_scale, interpret=INTERPRET, **kw)
+
+
+def quantized_matmul(x, w, **kw):
+    """Quantize-on-the-fly f32/bf16 matmul through the int8 kernel."""
+    xq, sx = quantize_rowwise(x)
+    wq, sw = quantize_colwise(w)
+    return int8_matmul(xq, wq, sx, sw, **kw).astype(x.dtype)

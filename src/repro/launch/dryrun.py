@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent per cell.
+
+For every (architecture × input shape) cell and both production meshes
+(single-pod 16×16, multi-pod 2×16×16) this lowers the REAL step function
+(train_step / prefill / decode_step — the same code the trainer and serving
+engine execute) against abstract, NamedSharding-annotated inputs, compiles
+it through GSPMD, and extracts the roofline inputs:
+
+  * ``compiled.cost_analysis()``   → per-device HLO FLOPs / bytes accessed
+  * ``compiled.as_text()`` parse   → per-device collective operand bytes
+  * ``compiled.memory_analysis()`` (+ an input-tree resident-bytes estimate
+    that is mesh-exact and works on the CPU backend) → fits-in-HBM proof
+
+Results are written as one JSON per cell under ``experiments/dryrun/`` and
+aggregated into EXPERIMENTS.md by benchmarks/roofline_report.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+  python -m repro.launch.dryrun --arch X --shape Y --override remat=none
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs
+from repro.configs.base import ArchConfig
+from repro.core.cost_model import (
+    MeshPlan,
+    Roofline,
+    decode_model_flops,
+    hbm_bytes_terms,
+    prefill_model_flops,
+    train_model_flops,
+)
+from repro.core.hlo import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import decode_step, param_defs, prefill
+from repro.models.params import abstract_params, is_def
+from repro.sharding.rules import activate_mesh, make_rules, sharding_for, tensor_parallel_rules
+from repro.training.train_loop import abstract_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def default_fsdp(cfg: ArchConfig) -> bool:
+    """ZeRO-3 weight sharding on once weights+opt exceed TP-only HBM."""
+    return cfg.param_count() > 10e9
+
+
+def apply_overrides(cfg: ArchConfig, overrides: dict[str, Any]) -> ArchConfig:
+    if not overrides:
+        return cfg
+    overrides = dict(overrides)
+    for k, v in overrides.items():
+        if k.endswith("dtype") and isinstance(v, str):  # e.g. kv_dtype=float8_e4m3fn
+            overrides[k] = jnp.dtype(v)
+    return dataclasses.replace(cfg, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ArchConfig, shape_id: str, mesh, *, fsdp: bool | None = None,
+               parallelism: str = "tp"):
+    """Returns (lowered, meta) for one cell on one mesh."""
+    kind = SHAPES[shape_id]["kind"]
+    fsdp = default_fsdp(cfg) if fsdp is None else fsdp
+    rules = make_rules(parallelism, fsdp=fsdp)
+    shard = lambda d: sharding_for(d, mesh, rules)
+
+    with activate_mesh(mesh, rules):
+        if kind == "train":
+            params_abs, opt_abs = abstract_state(cfg, mesh, rules)
+            batch_abs = input_specs(cfg, shape_id, mesh)
+            step_abs = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+            fn = make_train_step(cfg)
+            jitted = jax.jit(fn, donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs, step_abs)
+            inputs = (params_abs, opt_abs, batch_abs)
+        elif kind == "prefill":
+            params_abs = abstract_params(param_defs(cfg), shard)
+            batch_abs = input_specs(cfg, shape_id, mesh)
+
+            def fn(p, batch):
+                return prefill(
+                    p, batch["tokens"], cfg,
+                    frontend_embeds=batch.get("frontend_embeds"),
+                )
+
+            lowered = jax.jit(fn).lower(params_abs, batch_abs)
+            inputs = (params_abs, batch_abs)
+        else:  # decode
+            params_abs = abstract_params(param_defs(cfg), shard)
+            spec = input_specs(cfg, shape_id, mesh)
+            cache_abs = spec.pop("cache")
+
+            def fn(p, cache, batch):
+                return decode_step(p, cache, batch["token"], batch["pos"], cfg)
+
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(params_abs, cache_abs, spec)
+            inputs = (params_abs, cache_abs, spec)
+    return lowered, {"kind": kind, "fsdp": fsdp, "inputs": inputs}
+
+
+# ---------------------------------------------------------------------------
+# Depth-fit analysis: post-fusion cost from two small UNROLLED compiles.
+#
+# Why: (a) lax.scan lowers to `while`, whose body HloCostAnalysis counts
+# ONCE → scanned compiled cost under-counts by the trip count; (b) the
+# unrolled *lowered* (pre-optimization) module counts every layer but has no
+# fusion → "bytes accessed" overstates HBM traffic ~5-10×. Compiling the
+# UNROLLED module at two small depths (La, Lb) gives post-fusion per-device
+# numbers with every layer visible; per-layer cost is homogeneous, so
+# cost(L) = base + slope·L extrapolates exactly to the full depth. The
+# full-depth scanned compile remains the compile/memory PROOF; the fit is
+# the measurement instrument.
+# ---------------------------------------------------------------------------
+def fit_depths(cfg: ArchConfig) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        # keep L ≡ 3 (mod attn_every) so shared-attn applications stay linear
+        return 9, 15
+    if cfg.family == "moe" and cfg.first_k_dense:
+        return cfg.first_k_dense + 2, cfg.first_k_dense + 6
+    if cfg.family == "audio":
+        return 2, cfg.num_layers  # decoder depth; encoder fixed in the base
+    return 4, 8
+
+
+def depth_fit_analysis(cfg: ArchConfig, shape_id: str, mesh, fsdp: bool,
+                       parallelism: str = "tp") -> dict:
+    la, lb = fit_depths(cfg)
+    lf = cfg.num_layers
+    points = {}
+    for L in (la, lb):
+        # attention_impl="naive": chunked attention's inner lax.scan is a
+        # while loop whose body HloCostAnalysis counts once — naive has
+        # IDENTICAL FLOPs with every dot visible (abstract compile, so the
+        # (S×S) scores are never allocated).
+        cfg_l = dataclasses.replace(
+            cfg, num_layers=L, scan_layers=False, attention_impl="naive"
+        )
+        lowered, _ = lower_cell(cfg_l, shape_id, mesh, fsdp=fsdp,
+                                parallelism=parallelism)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = collective_stats(compiled.as_text())
+        points[L] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": {k: float(v["operand_bytes"]) for k, v in coll.summary()["by_op"].items()},
+        }
+        del compiled, lowered
+
+    def extrap(key_a: float, key_b: float) -> float:
+        slope = (key_b - key_a) / (lb - la)
+        return max(key_a + slope * (lf - la), 0.0)
+
+    pa, pb = points[la], points[lb]
+    kinds = sorted(set(pa["coll"]) | set(pb["coll"]))
+    coll_full = {
+        k: extrap(pa["coll"].get(k, 0.0), pb["coll"].get(k, 0.0)) for k in kinds
+    }
+    return {
+        "depths": [la, lb],
+        "points": points,
+        "flops_per_dev": extrap(pa["flops"], pb["flops"]),
+        "bytes_per_dev": extrap(pa["bytes"], pb["bytes"]),
+        "coll_bytes_per_dev": sum(coll_full.values()),
+        "coll_by_op": coll_full,
+    }
+
+
+def resident_bytes_per_device(inputs) -> int:
+    """Mesh-exact bytes/device of all inputs (weights+opt+cache+batch)."""
+    total = 0
+    for leaf in jax.tree.leaves(inputs):
+        shard_shape = leaf.sharding.shard_shape(leaf.shape)
+        n = 1
+        for d in shard_shape:
+            n *= d
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def model_flops_of(cfg: ArchConfig, shape_id: str) -> float:
+    sh = SHAPES[shape_id]
+    b, s = sh["global_batch"], sh["seq_len"]
+    if sh["kind"] == "train":
+        return train_model_flops(cfg, b, s)
+    if sh["kind"] == "prefill":
+        return prefill_model_flops(cfg, b, s)
+    return decode_model_flops(cfg, b, s)
+
+
+# ---------------------------------------------------------------------------
+# One full cell: lower → compile → analyse → JSON
+# ---------------------------------------------------------------------------
+def run_cell(
+    arch: str,
+    shape_id: str,
+    *,
+    multi_pod: bool = False,
+    overrides: dict[str, Any] | None = None,
+    out_dir: str | None = None,
+    tag: str = "",
+    verbose: bool = True,
+) -> dict:
+    overrides = dict(overrides or {})
+    parallelism = overrides.pop("parallelism", "tp")
+    cfg = apply_overrides(get_config(arch), overrides)
+    ok, why = cfg.supports(shape_id)
+    if not ok:
+        return {"arch": arch, "shape": shape_id, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    t0 = time.perf_counter()
+    lowered, meta = lower_cell(cfg, shape_id, mesh, parallelism=parallelism)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    # FLOPs + collectives: depth-fit over two small unrolled compiles (see
+    # depth_fit_analysis docstring — the scanned module under-counts loops).
+    # Memory term: analytical HBM traffic model (cost_model.hbm_bytes_terms)
+    # — CPU "bytes accessed" is not a TPU HBM proxy (no TPU fusion, f32
+    # converts); the fit bytes are recorded as a cross-check only.
+    fit = depth_fit_analysis(cfg, shape_id, mesh, meta["fsdp"], parallelism)
+    flops_dev = fit["flops_per_dev"]
+    if parallelism == "fsdp_only":
+        plan = MeshPlan(dp=chips, tp=1, fsdp=True)
+    else:
+        plan = MeshPlan(dp=chips // mesh.shape["model"], tp=mesh.shape["model"],
+                        fsdp=meta["fsdp"])
+    mem_terms = hbm_bytes_terms(cfg, shape_id, plan)
+    bytes_dev = mem_terms["total"]
+
+    # Cross-check: collectives of the production (scanned) module, with
+    # while-loop trip counts applied (core/hlo.py).
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    mem_fields = {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_str = str(mem)
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes"):
+            mem_fields[f] = int(getattr(mem, f, 0))
+    except Exception as e:  # CPU backend may not implement it
+        mem_str = f"unavailable: {e}"
+    resident = resident_bytes_per_device(meta["inputs"])
+    # live bytes at peak ≈ non-aliased args + temps (per-device SPMD module)
+    live = (
+        mem_fields.get("argument_size_in_bytes", resident)
+        - mem_fields.get("alias_size_in_bytes", 0)
+        + mem_fields.get("temp_size_in_bytes", 0)
+        + mem_fields.get("output_size_in_bytes", 0)
+    )
+
+    roof = Roofline(
+        flops_per_dev=flops_dev,
+        hbm_bytes_per_dev=bytes_dev,
+        coll_bytes_per_dev=float(fit["coll_bytes_per_dev"]),
+        chips=chips,
+        model_flops=model_flops_of(cfg, shape_id),
+    )
+
+    result = {
+        "arch": arch,
+        "shape": shape_id,
+        "mesh": mesh_name,
+        "kind": meta["kind"],
+        "fsdp": meta["fsdp"],
+        "parallelism": parallelism,
+        "chips": chips,
+        "overrides": overrides or {},
+        "tag": tag,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": {
+            "flops_per_dev": flops_dev,
+            "bytes_per_dev": bytes_dev,
+            "mem_terms": mem_terms,
+            "fit": fit,
+        },
+        "collectives": {
+            "fit_by_op": fit["coll_by_op"],
+            "scanned_trip_scaled": coll.summary(),
+        },
+        "resident_bytes_per_dev": resident,
+        "resident_gb_per_dev": round(resident / 1024**3, 3),
+        "live_bytes_per_dev": live,
+        "live_gb_per_dev": round(live / 1024**3, 3),
+        "fits_hbm_resident": resident <= 16 * 1024**3,
+        "fits_hbm_live": live <= 16 * 1024**3,
+        "memory_analysis": mem_str[:2000],
+        "roofline": roof.summary(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        r = result["roofline"]
+        print(
+            f"[{mesh_name}] {arch} × {shape_id}: compile {t_compile:.1f}s  "
+            f"resident {result['resident_gb_per_dev']:.2f} live {result['live_gb_per_dev']:.2f} GB/dev  "
+            f"T={r['t_step_s'] * 1e3:.2f} ms  bottleneck={r['bottleneck']}  "
+            f"mfu={r['mfu']:.3f}  coll={fit['coll_bytes_per_dev'] / 1e6:.1f} MB/dev"
+        )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fname = f"{mesh_name}__{arch}__{shape_id}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def iter_cells():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_id in SHAPES:
+            ok, _ = cfg.supports(shape_id)
+            if ok:
+                yield arch, shape_id
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _parse_override(s: str) -> tuple[str, Any]:
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true", help="every supported cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--override", action="append", default=[], metavar="K=V")
+    ap.add_argument("--tag", default="", help="suffix for hillclimb variants")
+    ap.add_argument("--out", default=os.path.normpath(OUT_DIR))
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for a, s in iter_cells():
+            print(a, s)
+        return 0
+
+    overrides = dict(_parse_override(s) for s in args.override)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape_id in cells:
+            try:
+                run_cell(
+                    arch, shape_id, multi_pod=multi_pod,
+                    overrides=overrides, out_dir=args.out, tag=args.tag,
+                )
+            except Exception as e:
+                failures.append((arch, shape_id, multi_pod, repr(e)))
+                print(f"FAIL [{'multi' if multi_pod else 'single'}] {arch} × {shape_id}: {e!r}",
+                      file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} cell(s) FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device count is locked at first backend init,
+and only the dry-run forces 512 host devices.
+
+Topology: one v5e pod = 16×16 = 256 chips, axes ("data", "model") — "model"
+is the TP/EP/SP axis (kept within a pod: ICI-only collectives), "data" the
+DP/FSDP axis. Multi-pod adds a leading "pod" axis (DCN-connected): pure DP
+across pods, so the only cross-pod collective is the gradient all-reduce.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "the dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 BEFORE any jax import"
+        )
+    import numpy as np
+
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh():
+    """Single-process mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(jax.devices()).reshape(1, n), ("data", "model")
+    )

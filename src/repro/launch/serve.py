@@ -1,0 +1,60 @@
+"""Serving launcher: workload-aware duty-cycled inference (RQ2 on TPU).
+
+Runs the real InferenceEngine (reduced config on CPU) under a request trace
+and compares the paper's strategies — On-Off / Idle-Waiting / Slow-Down /
+adaptive — with TPU "configuration" constants (program + weight reload).
+
+Example:
+  python -m repro.launch.serve --arch granite-3-8b --trace bursty --n 200
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config, list_archs
+from repro.core.workload import bursty_trace, irregular_trace, regular_trace
+from repro.serving.engine import InferenceEngine, ServeConfig, WorkloadAwareServer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--trace", default="regular", choices=("regular", "irregular", "bursty"))
+    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--period", type=float, default=2.0, help="regular trace period (s)")
+    ap.add_argument("--chips", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch)
+    engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=args.batch, max_len=64))
+    server = WorkloadAwareServer(engine, chips=args.chips)
+    t_inf = server.measure_latency(batch=args.batch, new_tokens=args.new_tokens)
+    prof = server.profile(t_inf)
+    print(f"{args.arch}: measured batch latency {t_inf * 1e3:.1f} ms, "
+          f"reload {prof.t_cfg_s:.2f}s/{prof.e_cfg_j:.0f}J")
+
+    if args.trace == "regular":
+        gaps = regular_trace(args.period, t_inf, args.n)
+    elif args.trace == "irregular":
+        gaps = irregular_trace(prof, n=args.n, seed=args.seed)
+    else:
+        gaps = bursty_trace(prof, n=args.n, seed=args.seed)
+
+    results = server.compare_strategies(gaps, batch=args.batch,
+                                        new_tokens=args.new_tokens,
+                                        execute_every=max(args.n // 4, 1))
+    best = max(results, key=lambda k: results[k].items_per_joule)
+    for k, v in results.items():
+        star = " *" if k == best else ""
+        print(f"  {k:14s} items/J={v.items_per_joule:.5f} reloads={v.reloads} "
+              f"missed={v.missed}{star}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,123 @@
+"""Activation-function implementation variants (paper RQ1).
+
+The paper's RTL templates provide several hardware implementations per
+activation function (exact, piecewise-linear, LUT-based, "hard") trading
+precision against resources/energy. We mirror that on TPU:
+
+  exact — transcendental on the VPU (highest precision, most VPU passes)
+  pwl   — the classic PLAN piecewise-linear approximation (cheap compares+FMA)
+  lut   — 256-entry table gather over a clamped input range
+  hard  — HardSigmoid/HardTanh (min/max only; the paper shows these are
+          loss-free under quantization-aware training)
+
+These jnp definitions are the *semantics*; ``repro.kernels.activations``
+lowers the same variants as Pallas TPU kernels and validates against these.
+Relative VPU cost weights (used by the analytical energy model) are attached
+per variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LUT_SIZE = 256
+LUT_RANGE = 8.0  # inputs clamped to [-8, 8]
+
+
+# -- sigmoid variants --------------------------------------------------------
+def sigmoid_exact(x):
+    return jax.nn.sigmoid(x)
+
+
+def sigmoid_pwl(x):
+    """PLAN approximation (Amin et al.), symmetric around 0."""
+    a = jnp.abs(x)
+    y = jnp.where(
+        a >= 5.0,
+        1.0,
+        jnp.where(
+            a >= 2.375,
+            0.03125 * a + 0.84375,
+            jnp.where(a >= 1.0, 0.125 * a + 0.625, 0.25 * a + 0.5),
+        ),
+    )
+    return jnp.where(x >= 0, y, 1.0 - y).astype(x.dtype)
+
+
+def _sigmoid_table():
+    """Half-range table: σ on [0, 8]. Exploiting σ(−x) = 1 − σ(x) halves the
+    BRAM *and* makes the implementation exactly point-symmetric — the
+    standard FPGA LUT construction (paper refs [16–19]); grid step 8/255
+    bounds the nearest-neighbour error at max σ'·h/2 ≈ 3.93e-3."""
+    grid = jnp.linspace(0.0, LUT_RANGE, LUT_SIZE, dtype=jnp.float32)
+    return jax.nn.sigmoid(grid)
+
+
+def sigmoid_lut(x):
+    xf = x.astype(jnp.float32)
+    a = jnp.clip(jnp.abs(xf), 0.0, LUT_RANGE)
+    idx = jnp.round(a / LUT_RANGE * (LUT_SIZE - 1)).astype(jnp.int32)
+    y = jnp.take(_sigmoid_table(), idx)
+    return jnp.where(xf >= 0, y, 1.0 - y).astype(x.dtype)
+
+
+def sigmoid_hard(x):
+    # relu6(x+3)/6 — matches the paper's HardSigmoid RTL template
+    return (jnp.clip(x + 3.0, 0.0, 6.0) / 6.0).astype(x.dtype)
+
+
+# -- tanh variants (derived: tanh(x) = 2·sigmoid(2x) − 1) --------------------
+def tanh_exact(x):
+    return jnp.tanh(x)
+
+
+def tanh_pwl(x):
+    return (2.0 * sigmoid_pwl(2.0 * x) - 1.0).astype(x.dtype)
+
+
+def tanh_lut(x):
+    return (2.0 * sigmoid_lut(2.0 * x) - 1.0).astype(x.dtype)
+
+
+def tanh_hard(x):
+    return jnp.clip(x, -1.0, 1.0)
+
+
+_SIGMOID = {"exact": sigmoid_exact, "pwl": sigmoid_pwl, "lut": sigmoid_lut, "hard": sigmoid_hard}
+_TANH = {"exact": tanh_exact, "pwl": tanh_pwl, "lut": tanh_lut, "hard": tanh_hard}
+
+
+def get_sigmoid(impl: str):
+    return _SIGMOID[impl]
+
+
+def get_tanh(impl: str):
+    return _TANH[impl]
+
+
+def get_activation(family: str, impl: str = "exact"):
+    """MLP nonlinearity under a given implementation variant.
+
+    silu(x) = x·sigmoid(x); gelu approximated via tanh form so every variant
+    axis applies uniformly.
+    """
+    if family == "silu":
+        sig = get_sigmoid(impl)
+        return lambda x: x * sig(x)
+    if family == "gelu":
+        th = get_tanh(impl)
+        c = 0.7978845608028654  # sqrt(2/pi)
+        return lambda x: 0.5 * x * (1.0 + th(c * (x + 0.044715 * x * x * x)))
+    if family == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation family {family!r}")
+
+
+# Relative elementwise cost weights per variant (VPU ops per element),
+# consumed by core.cost_model / core.fpga. Calibrated from op counts:
+# exact sigmoid = exp + add + div ≈ 12 VPU-equivalent ops; pwl = 6 (compare
+# chain + FMA); lut = 4 (clamp, scale, round, gather); hard = 3 (clip, FMA).
+VARIANT_COST = {"exact": 12.0, "pwl": 6.0, "lut": 4.0, "hard": 3.0}
+# Max abs error vs. exact over [-8, 8] (measured in tests, documented here).
+# lut: half-range 256-entry grid + reflection, h=8/255 → max σ'·h/2 ≈ 3.93e-3.
+VARIANT_ERROR = {"exact": 0.0, "pwl": 2.45e-2, "lut": 4.0e-3, "hard": 1.27e-1}

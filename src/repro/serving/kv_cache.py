@@ -1,0 +1,85 @@
+"""Decode-cache definitions per architecture family.
+
+Layouts (ParamDef trees, so the same machinery that shards weights shards
+caches — logical axes drive the mesh mapping):
+
+  GQA families    k/v: (L, B, S, KV, hd)          bf16
+  MLA (deepseek)  c: (L, B, S, r), krope: (L, B, S, rope_d)  — compressed
+  SSM (mamba2)    conv: (L, B, W-1, d_inner+2N) bf16, state: (L, B, H, P, N) f32
+  hybrid (zamba2) SSM caches + shared-attn k/v: (n_apps, B, S, KV, hd)
+  audio (whisper) decoder self k/v + static cross k/v over encoder frames
+
+Sharding: batch → DP axes (when divisible), the KV *sequence* axis → "model"
+(flash-decoding style: each TP device holds a sequence slice and GSPMD turns
+the softmax into partial-reduction collectives). Sharding S instead of
+kv_heads is what keeps GQA archs with few KV heads (granite-34b has kv=1)
+memory-feasible at 32k–500k contexts — kv_heads can't split 16 ways, the
+sequence always can.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamDef
+
+
+def _kv(num_layers: int, b: int, s: int, kv: int, hd: int, dtype) -> ParamDef:
+    return ParamDef(
+        (num_layers, b, s, kv, hd),
+        ("layers", "batch", "kv_seq", "kv_heads", None),
+        init="zeros",
+        dtype=dtype,
+    )
+
+
+def cache_defs(cfg: ArchConfig, *, batch: int, max_len: int) -> dict:
+    f = cfg.family
+    l, b, s = cfg.num_layers, batch, max_len
+    hd = cfg.resolved_head_dim
+    dt = cfg.kv_dtype or cfg.dtype  # fp8 KV: halves decode cache reads
+    if f in ("dense", "vlm") or (f == "moe" and cfg.mla is None):
+        return {"k": _kv(l, b, s, cfg.num_kv_heads, hd, dt), "v": _kv(l, b, s, cfg.num_kv_heads, hd, dt)}
+    if f == "moe":  # deepseek MLA — compressed cache
+        m = cfg.mla
+        return {
+            "c": ParamDef((l, b, s, m.kv_lora_rank), ("layers", "batch", "kv_seq", None), init="zeros", dtype=dt),
+            "krope": ParamDef((l, b, s, m.qk_rope_head_dim), ("layers", "batch", "kv_seq", None), init="zeros", dtype=dt),
+        }
+    if f in ("ssm", "hybrid"):
+        sm = cfg.ssm
+        d_in = sm.d_inner(cfg.d_model)
+        nh = sm.num_heads(cfg.d_model)
+        out = {
+            "conv": ParamDef(
+                (l, b, sm.conv_width - 1, d_in + 2 * sm.state_size),
+                ("layers", "batch", None, None), init="zeros", dtype=dt,
+            ),
+            "state": ParamDef(
+                (l, b, nh, sm.head_dim, sm.state_size),
+                ("layers", "batch", "ssm_heads", None, None), init="zeros", dtype=jnp.float32,
+            ),
+        }
+        if f == "hybrid":
+            n_apps = math.ceil(cfg.num_layers / cfg.attn_every)
+            out["shared_k"] = _kv(n_apps, b, s, cfg.num_kv_heads, hd, dt)
+            out["shared_v"] = _kv(n_apps, b, s, cfg.num_kv_heads, hd, dt)
+        return out
+    if f == "audio":
+        return {
+            "k": _kv(l, b, s, cfg.num_kv_heads, hd, dt),
+            "v": _kv(l, b, s, cfg.num_kv_heads, hd, dt),
+            "cross_k": _kv(l, b, cfg.encoder_seq, cfg.num_kv_heads, hd, dt),
+            "cross_v": _kv(l, b, cfg.encoder_seq, cfg.num_kv_heads, hd, dt),
+        }
+    raise ValueError(f)
+
+
+def cache_bytes(cfg: ArchConfig, *, batch: int, max_len: int) -> int:
+    defs = cache_defs(cfg, batch=batch, max_len=max_len)
+    import jax
+
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(math.prod(d.shape) * jnp.dtype(d.dtype).itemsize for d in leaves)

@@ -1,0 +1,1 @@
+from repro.sharding.rules import ShardingRules, spec_for, batch_spec  # noqa: F401

@@ -1,0 +1,191 @@
+"""Logical-axis → mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+A rule maps a *logical* tensor axis (declared in ParamDef.logical) onto zero
+or more mesh axes. ``spec_for`` additionally drops any assignment that does
+not divide the dimension evenly — e.g. kv_heads=4 cannot shard over a
+16-way "model" axis and silently falls back to replication. This keeps the
+dry-run robust across all 10 architectures without per-arch special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDef
+
+# Mesh axis names used across the framework.
+POD, DATA, MODEL = "pod", "data", "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Assignment of logical axes to mesh axes.
+
+    ``fsdp`` additionally shards the designated weight axis ("embed") over
+    the data axis (ZeRO-3 style); required to fit ≥30B-param configs.
+    ``dp_axes`` is the batch-sharding axis set — ("pod","data") under the
+    default TP mapping, ("pod","data","model") under fsdp_only (the same
+    physical mesh with the model axis re-purposed as extra DP).
+    """
+
+    rules: Mapping[str, tuple[str, ...]]
+    fsdp: bool = False
+    dp_axes: tuple[str, ...] = (POD, DATA)
+
+    def axes_for(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        got = self.rules.get(logical, ())
+        if logical == "embed" and not self.fsdp:
+            return ()
+        return got
+
+
+def tensor_parallel_rules(fsdp: bool = False) -> ShardingRules:
+    """Default production rules: TP over "model", optional FSDP over "data".
+
+    - vocab / mlp / heads / experts → "model"   (TP / EP)
+    - embed → "data" when fsdp                    (ZeRO-3 weight shard)
+    - layers (scan dim) → never sharded
+    """
+    return ShardingRules(
+        rules={
+            "vocab": (MODEL,),
+            "mlp": (MODEL,),
+            "heads": (MODEL,),
+            "kv_heads": (MODEL,),
+            "experts": (MODEL,),
+            "embed": (DATA,),
+            "ssm_heads": (MODEL,),
+            "inner": (MODEL,),  # mamba d_inner
+            "kv_seq": (MODEL,),  # decode caches: flash-decoding sequence shard
+        },
+        fsdp=fsdp,
+    )
+
+
+def fsdp_only_rules() -> ShardingRules:
+    """Pure-FSDP mapping (hillclimb lever): NO tensor parallelism — weights
+    ZeRO-3-shard over ("data","model") jointly, batch shards over the whole
+    mesh. Same physical 16×16 pod, different logical mapping; trades the
+    per-layer TP activation all-reduces for per-layer weight all-gathers —
+    a win whenever 2·weights < layers·activations (large global batch)."""
+    return ShardingRules(
+        rules={
+            "embed": (DATA, MODEL),
+            "experts": (MODEL,),  # EP stays (expert weights are per-expert)
+            "kv_seq": (MODEL,),
+        },
+        fsdp=True,
+        dp_axes=(POD, DATA, MODEL),
+    )
+
+
+def make_rules(parallelism: str = "tp", fsdp: bool = False) -> ShardingRules:
+    if parallelism == "tp":
+        return tensor_parallel_rules(fsdp=fsdp)
+    if parallelism == "fsdp_only":
+        return fsdp_only_rules()
+    raise ValueError(parallelism)
+
+
+def _dim_divides(dim: int, mesh: Mesh, axes: Sequence[str]) -> bool:
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return False
+        size *= mesh.shape[a]
+    return size > 0 and dim % size == 0
+
+
+def spec_for(d: ParamDef, mesh: Mesh, rules: ShardingRules) -> P:
+    """PartitionSpec for one ParamDef under ``rules``, divisibility-checked."""
+    entries: list = []
+    used: set[str] = set()
+    for dim, logical in zip(d.shape, d.logical):
+        axes = tuple(a for a in rules.axes_for(logical) if a not in used)
+        if axes and _dim_divides(dim, mesh, axes):
+            entries.append(axes[0] if len(axes) == 1 else axes)
+            used.update(axes)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def sharding_for(d: ParamDef, mesh: Mesh, rules: ShardingRules) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(d, mesh, rules))
+
+
+def batch_axes(mesh: Mesh, rules: "ShardingRules | None" = None) -> tuple[str, ...]:
+    """Data-parallel mesh axes under the active (or given) rule set."""
+    rules = rules or active_rules()
+    return tuple(a for a in rules.dp_axes if a in mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context: model code calls ``constrain(x, logical)``;
+# when a mesh has been activated (dry-run / train / serve) this becomes a
+# with_sharding_constraint, otherwise it is the identity (smoke tests).
+# ---------------------------------------------------------------------------
+import contextlib
+import jax
+
+_ACTIVE: list[tuple[Mesh, "ShardingRules"]] = []
+
+_TP_LOGICAL = {"heads", "kv_heads", "mlp", "experts", "vocab", "inner", "ssm_heads", "seq_sp", "kv_seq"}
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh, rules: "ShardingRules | None" = None):
+    _ACTIVE.append((mesh, rules or tensor_parallel_rules()))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def active_rules() -> ShardingRules:
+    return _ACTIVE[-1][1] if _ACTIVE else tensor_parallel_rules()
+
+
+def constrain(x, logical: Sequence[str | None]):
+    """Logical activation-sharding constraint; no-op without an active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    rules = active_rules()
+    entries: list = []
+    used: set[str] = set()
+    for dim, lg in zip(x.shape, logical):
+        if lg == "batch":
+            axes = tuple(a for a in batch_axes(mesh, rules) if a not in used)
+        elif lg in _TP_LOGICAL and MODEL not in used and MODEL not in rules.dp_axes:
+            axes = (MODEL,)
+        else:
+            axes = ()
+        if axes and _dim_divides(dim, mesh, axes):
+            entries.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def batch_spec(batch_size: int, mesh: Mesh, *, extra_dims: int = 1,
+               rules: "ShardingRules | None" = None) -> P:
+    """Spec for activations/batches: shard batch dim over DP axes if it divides."""
+    axes = batch_axes(mesh, rules)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and batch_size % size == 0:
+        first = axes if len(axes) > 1 else axes[0]
+        return P(first, *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))

@@ -1,0 +1,154 @@
+"""Sharded, async, *elastic* checkpointing.
+
+Format: one directory per step —
+
+  step_000123/
+    manifest.json    logical tree structure, shapes, dtypes, step, metadata
+    leaf_00000.npy   flattened leaves in manifest order (np.save, host-local)
+    ...
+    COMMITTED        written LAST — a checkpoint without it is torn and ignored
+
+Elasticity: the manifest stores *logical* shapes only — no mesh is baked in.
+``restore()`` re-materializes every leaf and ``jax.device_put``s it to the
+shardings derived from the *current* mesh, so a run checkpointed on a
+16×16 pod restores onto 2×16×16 (or a single CPU) unchanged — the elastic
+rescale path. Saves run on a background thread (``wait()`` joins); the
+COMMITTED sentinel makes crashes during save safe (restart resumes from the
+previous committed step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+COMMITTED = "COMMITTED"
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, metadata: dict | None = None,
+             blocking: bool = False) -> None:
+        """Snapshot now (device→host copy is synchronous), write async."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        host_leaves = [np.asarray(l) for l in leaves]  # snapshot before mutation
+        self.wait()  # one in-flight save at a time
+
+        def work():
+            self._write(step, host_leaves, treedef, metadata or {})
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _write(self, step, host_leaves, treedef, metadata):
+        path = self._path(step)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "treedef": jax.tree_util.tree_structure(
+                jax.tree_util.tree_unflatten(treedef, list(range(len(host_leaves))))
+            ).__repr__(),
+            "leaves": [
+                {"index": i, "shape": list(l.shape), "dtype": str(l.dtype)}
+                for i, l in enumerate(host_leaves)
+            ],
+            "metadata": metadata,
+        }
+        for i, l in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), l)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, COMMITTED), "w") as f:
+            f.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ---------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = []
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if name.startswith("step_") and os.path.exists(os.path.join(full, COMMITTED)):
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(
+        self,
+        step: int | None = None,
+        *,
+        like: Any = None,
+        sharding_fn: Callable[[int, np.ndarray], Any] | None = None,
+    ) -> tuple[int, Any, dict]:
+        """Load (step, tree, metadata). ``like`` provides the treedef (an
+        abstract or real tree with the same structure); ``sharding_fn(i, arr)``
+        maps each leaf to the *current* mesh's sharding (elastic restore)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {self.directory}")
+        path = self._path(step)
+        if not os.path.exists(os.path.join(path, COMMITTED)):
+            raise FileNotFoundError(f"checkpoint {path} not committed (torn write?)")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrs = []
+        for spec in manifest["leaves"]:
+            a = np.load(os.path.join(path, f"leaf_{spec['index']:05d}.npy"))
+            assert list(a.shape) == spec["shape"], (a.shape, spec)
+            want = np.dtype(jax.numpy.dtype(spec["dtype"]))
+            if a.dtype != want:  # e.g. bfloat16 loads back as void16
+                a = a.view(want)
+            arrs.append(a)
+        if like is None:
+            raise ValueError("restore() needs `like=` for the tree structure")
+        treedef = jax.tree_util.tree_structure(like)
+        if sharding_fn is not None:
+            arrs = [jax.device_put(a, sharding_fn(i, a)) for i, a in enumerate(arrs)]
+        else:
+            arrs = [jax.numpy.asarray(a) for a in arrs]
+        return step, jax.tree_util.tree_unflatten(treedef, arrs), manifest["metadata"]
+
+    # -- misc ------------------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:06d}")
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._path(s), ignore_errors=True)

@@ -1,0 +1,208 @@
+"""Optimizers: AdamW and Adafactor, with ParamDef-declared state trees.
+
+State is declared the same way model params are (ParamDef trees), so the
+dry-run can build abstract, NamedSharding-annotated optimizer state with
+zero allocation — mandatory for the 671B config, whose Adam state alone
+(~10.8 TB) exceeds single-pod HBM. That constraint is exactly why
+deepseek-v3-671b pins ``optimizer="adafactor"`` (factored second moments:
+O(rows+cols) instead of O(rows·cols)).
+
+All state is float32 regardless of param dtype (bf16 Adam moments diverge).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, is_def
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+FACTOR_B2_POW = 0.8  # adafactor: beta2_t = 1 - t^-0.8
+FACTOR_EPS = 1e-30
+CLIP_NORM = 1.0
+
+
+# ---------------------------------------------------------------------------
+# LR schedule
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        t = jnp.clip(
+            (step - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = self.min_ratio + (1 - self.min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < self.warmup_steps, warm, self.peak_lr * cos)
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float = CLIP_NORM):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_state_defs(defs) -> dict:
+    f32 = lambda d: dataclasses.replace(d, dtype=jnp.float32, init="zeros")
+    return {
+        "m": jax.tree.map(f32, defs, is_leaf=is_def),
+        "v": jax.tree.map(f32, defs, is_leaf=is_def),
+        # f32 MASTER weights: Adam's normalized step (~lr) rounds to zero
+        # against bf16 ULP once weights reach O(0.1) — without masters the
+        # model stops learning. Initialized FROM the params (init_opt_state).
+        "master": jax.tree.map(f32, defs, is_leaf=is_def),
+        "step": ParamDef((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, lr, *, weight_decay: float = 0.1):
+    t = state["step"] + 1
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**tf
+    bc2 = 1.0 - ADAM_B2**tf
+
+    def upd(p, g, m, v, mw):
+        gf = g.astype(jnp.float32)
+        m_new = ADAM_B1 * m + (1 - ADAM_B1) * gf
+        v_new = ADAM_B2 * v + (1 - ADAM_B2) * gf * gf
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + ADAM_EPS)
+        decay = weight_decay * mw if p.ndim >= 2 else 0.0
+        mw_new = mw - lr * (step + decay)
+        return mw_new.astype(p.dtype), m_new, v_new, mw_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], state["master"])
+    is_t = lambda x: isinstance(x, tuple)
+    return (
+        jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+        {
+            "m": jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+            "v": jax.tree.map(lambda o: o[2], out, is_leaf=is_t),
+            "master": jax.tree.map(lambda o: o[3], out, is_leaf=is_t),
+            "step": t,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored over the trailing two dims
+# ---------------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_state_defs(defs) -> dict:
+    def row(d: ParamDef):
+        if _factored(d.shape):
+            return ParamDef(d.shape[:-1], d.logical[:-1], init="zeros", dtype=jnp.float32)
+        return ParamDef(d.shape, d.logical, init="zeros", dtype=jnp.float32)
+
+    def col(d: ParamDef):
+        if _factored(d.shape):
+            return ParamDef(
+                d.shape[:-2] + d.shape[-1:], d.logical[:-2] + d.logical[-1:],
+                init="zeros", dtype=jnp.float32,
+            )
+        return ParamDef((1,), (None,), init="zeros", dtype=jnp.float32)
+
+    return {
+        "vr": jax.tree.map(row, defs, is_leaf=is_def),
+        "vc": jax.tree.map(col, defs, is_leaf=is_def),
+        "step": ParamDef((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr, *, weight_decay: float = 0.0,
+                     clip_threshold: float = 1.0):
+    t = state["step"] + 1
+    beta2 = 1.0 - jnp.power(t.astype(jnp.float32), -FACTOR_B2_POW)
+
+    def upd(p, g, vr, vc):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + FACTOR_EPS
+        if _factored(p.shape):
+            vr_new = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r_factor = jax.lax.rsqrt(
+                vr_new / jnp.maximum(jnp.mean(vr_new, axis=-1, keepdims=True), FACTOR_EPS)
+            )
+            c_factor = jax.lax.rsqrt(vc_new)
+            update = gf * r_factor[..., None] * c_factor[..., None, :]
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * g2
+            vc_new = vc
+            update = gf * jax.lax.rsqrt(vr_new)
+        # RMS clip (adafactor's update clipping)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        decay = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p_new = (p.astype(jnp.float32) - lr * (update + decay)).astype(p.dtype)
+        return p_new, vr_new, vc_new
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    is_t = lambda x: isinstance(x, tuple)
+    return (
+        jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+        {
+            "vr": jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+            "vc": jax.tree.map(lambda o: o[2], out, is_leaf=is_t),
+            "step": t,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Uniform interface
+# ---------------------------------------------------------------------------
+def opt_state_defs(name: str, defs) -> dict:
+    if name == "adamw":
+        return adamw_state_defs(defs)
+    if name == "adafactor":
+        # no master copy: factored states exist to stay sub-weight-sized
+        # (671B masters = 2.7 TB). bf16 update rounding is tolerated, as in
+        # the original Adafactor large-scale recipes.
+        return adafactor_state_defs(defs)
+    raise ValueError(name)
+
+
+def init_opt_state(name: str, defs, params, key):
+    """Materialize optimizer state; AdamW masters start as f32 params."""
+    from repro.models.params import init_params
+
+    state = init_params(opt_state_defs(name, defs), key)
+    if name == "adamw":
+        # copy=True: astype(f32) of an f32 leaf would alias the param buffer,
+        # which breaks donation (same buffer donated twice in one call)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+        )
+    return state
+
+
+def opt_update(name: str, params, grads, state, lr):
+    if name == "adamw":
+        return adamw_update(params, grads, state, lr)
+    if name == "adafactor":
+        return adafactor_update(params, grads, state, lr)
+    raise ValueError(name)

@@ -1,0 +1,213 @@
+"""Training loop: sharded train_step builder + driver with fault tolerance.
+
+``make_train_step`` builds the jitted (params, opt_state, batch, step) →
+(params, opt_state, metrics) function used BOTH by the real driver (CPU
+smoke / examples) and the multi-pod dry-run (abstract lowering) — one code
+path, so what the dry-run proves is what the trainer runs.
+
+Features:
+  * microbatch gradient accumulation (``accum`` — lax.scan over microbatch
+    slices; also the compute/communication overlap lever: the DP grad
+    all-reduce of microbatch k overlaps microbatch k+1's backward under
+    XLA's latency-hiding scheduler),
+  * AdamW / Adafactor via cfg.optimizer, cosine schedule, global-norm clip,
+  * donated params/opt state (in-place HBM update),
+  * Trainer driver: checkpoint-every-N (async), straggler detection,
+    restart-on-failure with deterministic data replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import SyntheticLM, make_batch
+from repro.models.model import init_model, param_defs, train_loss
+from repro.models.params import abstract_params, init_params
+from repro.sharding.rules import ShardingRules, activate_mesh, batch_spec, sharding_for, tensor_parallel_rules
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault import StragglerDetector, WorkerFailure, run_with_restarts
+from repro.training.optimizer import Schedule, clip_by_global_norm, init_opt_state, opt_state_defs, opt_update
+
+
+# ---------------------------------------------------------------------------
+# Step builder (shared with the dry-run)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, schedule: Schedule | None = None, *, accum: int = 1):
+    """Returns train_step(params, opt_state, batch, step)."""
+    schedule = schedule or Schedule()
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(train_loss, has_aux=True)(
+            params, batch, cfg
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step):
+        if accum > 1:
+            b = batch["tokens"].shape[0]
+            mb = b // accum
+
+            def slice_mb(x, i):
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(acc, i):
+                micro = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                loss, metrics, grads = grads_of(params, micro)
+                acc_loss, acc_grads = acc
+                return (
+                    acc_loss + loss / accum,
+                    jax.tree.map(lambda a, g: a + g / accum, acc_grads, grads),
+                ), metrics
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), metrics = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_grads), jnp.arange(accum)
+            )
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads)
+        lr = schedule(step)
+        params, opt_state = opt_update(cfg.optimizer, params, grads, opt_state, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+def state_shardings(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules):
+    """NamedShardings for (params, opt_state) from their ParamDef trees."""
+    defs = param_defs(cfg)
+    odefs = opt_state_defs(cfg.optimizer, defs)
+    fn = lambda d: sharding_for(d, mesh, rules)
+    from repro.models.params import is_def, param_specs
+
+    return (
+        jax.tree.map(fn, defs, is_leaf=is_def),
+        jax.tree.map(fn, odefs, is_leaf=is_def),
+    )
+
+
+def abstract_state(cfg: ArchConfig, mesh: Mesh, rules: ShardingRules):
+    """(params, opt_state) as sharded ShapeDtypeStructs — dry-run inputs."""
+    defs = param_defs(cfg)
+    odefs = opt_state_defs(cfg.optimizer, defs)
+    fn = lambda d: sharding_for(d, mesh, rules)
+    return abstract_params(defs, fn), abstract_params(odefs, fn)
+
+
+# ---------------------------------------------------------------------------
+# Trainer driver (real execution — smoke tests / examples)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    accum: int = 1
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    peak_lr: float = 3e-3
+    warmup_steps: int = 20
+    seed: int = 0
+
+
+class Trainer:
+    """End-to-end driver: data → step → metrics/checkpoints/fault handling."""
+
+    def __init__(self, cfg: ArchConfig, ds: SyntheticLM, tc: TrainerConfig,
+                 mesh: Mesh | None = None):
+        self.cfg, self.ds, self.tc = cfg, ds, tc
+        self.mesh = mesh
+        self.schedule = Schedule(
+            peak_lr=tc.peak_lr, warmup_steps=tc.warmup_steps, total_steps=tc.num_steps
+        )
+        self.ckpt = CheckpointManager(tc.checkpoint_dir, keep=tc.keep)
+        self.detector = StragglerDetector()
+        self.metrics_log: list[dict] = []
+        self.step_fn = jax.jit(
+            make_train_step(cfg, self.schedule, accum=tc.accum),
+            donate_argnums=(0, 1),
+        )
+        key = jax.random.PRNGKey(tc.seed)
+        self.params = init_model(cfg, key)
+        self.opt_state = init_opt_state(
+            cfg.optimizer, param_defs(cfg), self.params, key
+        )
+        self._failure_at: int | None = None  # test hook: inject WorkerFailure
+
+    # -- one step -------------------------------------------------------------
+    def _do_step(self, step: int):
+        if self._failure_at is not None and step == self._failure_at:
+            self._failure_at = None  # fail once
+            raise WorkerFailure(f"injected failure at step {step}")
+        batch = make_batch(self.cfg, self.ds, step)
+        t0 = time.perf_counter()
+        ctx = activate_mesh(self.mesh) if self.mesh is not None else _null()
+        with ctx:
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, jnp.int32(step)
+            )
+        dt = time.perf_counter() - t0
+        if self.detector.observe(dt):
+            self.detector.reset()  # mitigation: snapshot now, keep going
+            self.ckpt.save(step, self._state(), metadata={"straggler": True})
+        if step % self.tc.log_every == 0 or step == self.tc.num_steps - 1:
+            row = {k: float(v) for k, v in metrics.items()} | {
+                "step": step, "time_s": dt,
+            }
+            self.metrics_log.append(row)
+        if step > 0 and step % self.tc.checkpoint_every == 0:
+            self.ckpt.save(step, self._state(), metadata={"loss": float(metrics["loss"])})
+
+    def _state(self):
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def _restore(self) -> int:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            # no checkpoint yet: restart from scratch (deterministic init)
+            key = jax.random.PRNGKey(self.tc.seed)
+            self.params = init_model(self.cfg, key)
+            self.opt_state = init_opt_state(
+                self.cfg.optimizer, param_defs(self.cfg), self.params, key
+            )
+            return 0
+        step, state, _ = self.ckpt.restore(like=self._state())
+        self.params, self.opt_state = state["params"], state["opt_state"]
+        return step + 1  # resume after the checkpointed step
+
+    # -- loop -------------------------------------------------------------------
+    def run(self, start_step: int = 0) -> dict:
+        stats = run_with_restarts(
+            self._do_step,
+            start_step=start_step,
+            num_steps=self.tc.num_steps - start_step,
+            restore_fn=self._restore,
+            sleep=lambda s: None,
+        )
+        self.ckpt.save(self.tc.num_steps - 1, self._state(), blocking=True,
+                       metadata={"final": True})
+        return stats | {"metrics": self.metrics_log}
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null():
+    yield

@@ -1,0 +1,16 @@
+import os
+
+# Tests run on the default (single) CPU device — the dry-run alone forces
+# 512 host devices, in its own process. Keep any inherited flag out.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")

@@ -1,0 +1,110 @@
+"""Analytical roofline/energy model invariants + Generator TPU backend."""
+import dataclasses
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.candidates import DesignPoint
+from repro.core.cost_model import (
+    MeshPlan,
+    Roofline,
+    TPUCostBackend,
+    bytes_per_device_estimate,
+    estimate_step,
+    hbm_bytes_terms,
+    prefill_model_flops,
+    train_model_flops,
+)
+
+PLAN = MeshPlan(dp=16, tp=16)
+
+
+def test_roofline_bottleneck_and_tstep():
+    r = Roofline(flops_per_dev=197e12, hbm_bytes_per_dev=819e9 / 2,
+                 coll_bytes_per_dev=0, chips=4, model_flops=197e12 * 4)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.bottleneck == "compute"
+    assert r.t_step_s == pytest.approx(1.0)
+    assert r.t_step_noverlap_s == pytest.approx(1.5)
+    assert r.mfu == pytest.approx(1.0)
+    assert 0 < r.energy_j() <= r.t_step_s * r.chips * r.chip.p_peak_w
+
+
+def test_energy_interpolates_between_idle_and_peak():
+    lo = Roofline(1e12, 819e9, 0, 1, 1e12)   # memory-bound, low util
+    hi = Roofline(197e12, 1e9, 0, 1, 197e12)  # compute-bound, full util
+    chip = lo.chip
+    assert lo.energy_j() < hi.energy_j()
+    assert hi.energy_j() == pytest.approx(hi.t_step_s * chip.p_peak_w, rel=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "deepseek-v3-671b", "mamba2-780m"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_estimates_positive_and_consistent(arch, shape):
+    cfg = get_config(arch)
+    r = estimate_step(cfg, shape, PLAN)
+    s = r.summary()
+    assert s["compute_s"] > 0 and s["memory_s"] > 0
+    assert 0 < s["mfu"] <= 1.0, s
+    assert 0 < s["useful_ratio"] <= 1.0, s
+    assert s["t_step_s"] == max(s["compute_s"], s["memory_s"], s["collective_s"])
+
+
+def test_moe_flops_use_active_params_only():
+    moe = get_config("granite-moe-3b-a800m")
+    dense_equiv = train_model_flops(moe, 1, 4096)
+    # activating all experts would multiply the expert FLOPs by E/topk
+    assert moe.active_param_count() < 0.5 * moe.param_count()
+    assert dense_equiv < 6.0 * moe.param_count() * 4096
+
+
+def test_prefill_flops_below_third_of_train():
+    cfg = get_config("granite-34b")
+    pf = prefill_model_flops(cfg, 32, 32768)
+    tr = train_model_flops(cfg, 32, 32768)
+    assert pf < tr / 2.5  # fwd-only, and no full unembed
+
+
+def test_hbm_terms_structure():
+    cfg = get_config("granite-3-8b")
+    t = hbm_bytes_terms(cfg, "train_4k", PLAN)
+    assert t["total"] == pytest.approx(sum(v for k, v in t.items() if k != "total"))
+    assert t["weights_fwd"] == t["weights_bwd"] > 0
+    # remat="none" drops the recompute weight sweep and grows nothing else
+    t0 = hbm_bytes_terms(cfg, "train_4k", PLAN, remat="none")
+    assert t0["weights_remat"] == 0.0
+    assert t0["total"] < t["total"]
+    # flash attention zeroes the scores traffic
+    tf = hbm_bytes_terms(cfg, "train_4k", PLAN, attention_impl="flash")
+    assert tf["attn_scores"] == 0.0 and tf["total"] < t["total"]
+
+
+def test_decode_memory_dominated_by_weights_or_cache():
+    cfg = get_config("qwen1.5-110b")
+    t = hbm_bytes_terms(cfg, "decode_32k", PLAN)
+    assert t["weights"] + t["kv_cache"] > 0.9 * t["total"]
+
+
+def test_fsdp_reduces_resident_bytes():
+    cfg = get_config("qwen1.5-110b")
+    no = bytes_per_device_estimate(cfg, "train_4k", MeshPlan(dp=16, tp=16, fsdp=False))
+    yes = bytes_per_device_estimate(cfg, "train_4k", MeshPlan(dp=16, tp=16, fsdp=True))
+    assert yes < no / 4
+    assert yes < 16 * 1024**3  # fits v5e HBM — why default_fsdp turns it on
+
+
+def test_tpu_backend_int8_improves_compute_bound_cells():
+    cfg = get_config("deepseek-v3-671b")
+    be = TPUCostBackend(cfg, "train_4k", MeshPlan(dp=16, tp=16, fsdp=True))
+    bf16 = be.evaluate(DesignPoint.of(precision="bf16"))
+    int8 = be.evaluate(DesignPoint.of(precision="int8"))
+    assert int8.latency_s < bf16.latency_s
+    assert int8.max_act_error > bf16.max_act_error  # precision is the price
+
+
+def test_tpu_backend_feasibility_flags_oversized():
+    cfg = get_config("deepseek-v3-671b")
+    tiny = TPUCostBackend(cfg, "train_4k", MeshPlan(dp=1, tp=4))
+    ok, why = tiny.feasible(DesignPoint.of())
+    assert not ok and "HBM" in why

@@ -1,0 +1,160 @@
+"""Distribution-layer tests that need >1 device: run in a subprocess with
+forced host devices (the main test process keeps the default single device).
+Covers: MoE sharded==dense oracle, compressed gradient all-reduce, elastic
+checkpoint restore across meshes, and the trainer-on-mesh path.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_moe_sharded_matches_dense_oracle():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.configs import get_reduced_config
+        from repro.models.moe import moe_apply, moe_defs, _moe_dense, _shared_ffn
+        from repro.models.params import init_params
+        from repro.sharding.rules import activate_mesh
+
+        cfg = get_reduced_config('granite-moe-3b-a800m')
+        params = init_params(moe_defs(cfg), jax.random.PRNGKey(0))
+        params = jax.tree.map(lambda t: t.astype(jnp.float32), params)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model), jnp.float32)
+
+        y_dense, aux_dense = _moe_dense(params, x, cfg)
+
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ('data', 'model'))
+        with activate_mesh(mesh):
+            y_shard, aux_shard = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
+        # a2a path drops capacity-overflow tokens -> compare where tokens kept
+        diff = np.abs(np.asarray(y_shard) - np.asarray(y_dense))
+        rel = diff / (np.abs(np.asarray(y_dense)) + 1e-3)
+        frac_match = float((rel < 5e-2).mean())
+        assert frac_match > 0.95, frac_match
+        assert np.isfinite(float(aux_shard))
+        print('moe sharded ok', frac_match)
+    """)
+
+
+def test_compressed_grad_allreduce_matches_exact_mean():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.training.grad_compress import dp_value_and_grad
+
+        mesh = Mesh(np.asarray(jax.devices()).reshape(8, 1), ('data', 'model'))
+        params = {'w': jax.random.normal(jax.random.PRNGKey(0), (32, 16))}
+        batch = {'x': jax.random.normal(jax.random.PRNGKey(1), (64, 32)),
+                 'y': jax.random.normal(jax.random.PRNGKey(2), (64, 16))}
+
+        def loss(p, b):
+            return jnp.mean((b['x'] @ p['w'] - b['y'])**2)
+
+        exact_fn = dp_value_and_grad(loss, mesh, compressed=False)
+        comp_fn = dp_value_and_grad(loss, mesh, compressed=True)
+        with mesh:
+            l1, g1 = jax.jit(exact_fn)(params, batch)
+            l2, g2 = jax.jit(comp_fn)(params, batch)
+        assert abs(float(l1) - float(l2)) < 1e-5
+        g1, g2 = np.asarray(g1['w']), np.asarray(g2['w'])
+        rel = np.linalg.norm(g1 - g2) / np.linalg.norm(g1)
+        assert rel < 0.02, rel  # int8 wire quantization noise only
+        print('compressed allreduce ok', rel)
+    """)
+
+
+def test_elastic_checkpoint_restore_onto_mesh():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp, tempfile
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.training.checkpoint import CheckpointManager
+
+        tree = {'w': jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                'b': jnp.ones((8,), jnp.bfloat16)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(1, tree, blocking=True)  # saved unsharded ("old mesh")
+            mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ('data', 'model'))
+            # tree-flatten order is alphabetical: 'b' (rank 1), then 'w'
+            shardings = [NamedSharding(mesh, P('model')),
+                         NamedSharding(mesh, P('data', 'model'))]
+            step, restored, _ = mgr.restore(
+                like=tree, sharding_fn=lambda i, a: shardings[i])
+            assert step == 1
+            assert restored['w'].sharding.spec == P('data', 'model')
+            np.testing.assert_array_equal(
+                np.asarray(restored['w']), np.asarray(tree['w']))
+            np.testing.assert_array_equal(
+                np.asarray(restored['b'], np.float32),
+                np.asarray(tree['b'], np.float32))
+        print('elastic restore ok')
+    """)
+
+
+def test_train_step_on_mesh_with_sharded_state():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced_config
+        from repro.data.pipeline import SyntheticLM, make_batch
+        from repro.models.model import init_model, param_defs
+        from repro.models.params import init_params
+        from repro.sharding.rules import activate_mesh, batch_spec, sharding_for, tensor_parallel_rules
+        from repro.training.optimizer import init_opt_state
+        from repro.training.train_loop import make_train_step
+
+        cfg = get_reduced_config('granite-3-8b')
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ('data', 'model'))
+        rules = tensor_parallel_rules()
+        key = jax.random.PRNGKey(0)
+        params = init_model(cfg, key)
+        opt = init_opt_state(cfg.optimizer, param_defs(cfg), params, key)
+        from repro.models.params import is_def
+        pshard = jax.tree.map(lambda d: sharding_for(d, mesh, rules),
+                              param_defs(cfg), is_leaf=is_def)
+        params = jax.tree.map(jax.device_put, params, pshard)
+        ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+        batch = make_batch(cfg, ds, 0)
+        batch = jax.device_put(batch, NamedSharding(mesh, batch_spec(8, mesh)))
+        step_fn = jax.jit(make_train_step(cfg))
+        with activate_mesh(mesh):
+            p2, o2, metrics = step_fn(params, opt, batch, jnp.int32(0))
+            l0 = float(metrics['loss'])
+            for s in range(1, 4):
+                b = jax.device_put(make_batch(cfg, ds, s),
+                                   NamedSharding(mesh, batch_spec(8, mesh)))
+                p2, o2, metrics = step_fn(p2, o2, b, jnp.int32(s))
+        assert np.isfinite(l0) and np.isfinite(float(metrics['loss']))
+        print('mesh train ok', l0, float(metrics['loss']))
+    """)
+
+
+def test_production_mesh_construction():
+    run_sub("""
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert m1.devices.shape == (16, 16) and m1.axis_names == ('data', 'model')
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.devices.shape == (2, 16, 16)
+        assert m2.axis_names == ('pod', 'data', 'model')
+        print('mesh ok')
+    """, devices=512)

@@ -1,0 +1,103 @@
+"""Generator behaviour: pruning soundness, ranking, search methods, RQ3."""
+import numpy as np
+import pytest
+
+from repro.core.candidates import DesignPoint
+from repro.core.constraints import (
+    ApplicationSpec,
+    scenario_continuous_throughput,
+    scenario_latency_critical,
+    scenario_regular_sensor,
+)
+from repro.core.fpga import FPGACostBackend, optimized_template, paper_workload
+from repro.core.generator import Generator
+from repro.core.workload import AccelProfile, bursty_trace
+
+W = paper_workload()
+BACKEND = FPGACostBackend(workload=W)
+
+
+def test_exhaustive_search_pruning_is_sound():
+    app = ApplicationSpec(goal="gops_per_w", max_latency_s=40e-6,
+                          resource_budget={"lut": 8000})
+    res = Generator(BACKEND, app).search(method="exhaustive", refine=False)
+    assert res.visited == res.space_size == 256
+    # every pruned point genuinely violates a constraint
+    for point, why in res.pruned:
+        est_ok, _ = BACKEND.feasible(point)
+        if est_ok:
+            est = BACKEND.evaluate(point)
+            ok, _ = app.check(point, est)
+            assert not ok, (point, why)
+    # every ranked candidate satisfies everything
+    for c in res.ranked:
+        assert c.estimate.latency_s <= 40e-6
+    # ranking is by descending score
+    scores = [c.score for c in res.ranked]
+    assert scores == sorted(scores, reverse=True)
+
+
+def test_generator_beats_paper_optimized_design():
+    """RQ3: systematic exploration ≥ the paper's hand-optimized template."""
+    res = Generator(BACKEND, scenario_continuous_throughput()).search(
+        method="exhaustive", refine=False
+    )
+    assert res.best.score >= optimized_template().gops_per_w(W) - 1e-9
+
+
+def test_precision_constraint_excludes_hard_variants():
+    app = scenario_latency_critical(deadline_s=100e-6)  # max_act_error 5e-3
+    res = Generator(BACKEND, app).search(method="exhaustive", refine=False)
+    assert res.ranked
+    for c in res.ranked:
+        assert c.point["act_impl"] in ("exact", "lut"), c.point
+
+
+def test_beam_and_evolutionary_close_to_exhaustive():
+    app = scenario_regular_sensor(0.040)
+    best_ex = Generator(BACKEND, app).search(method="exhaustive", refine=False).best.score
+    for method in ("beam", "evolutionary"):
+        res = Generator(BACKEND, app).search(method=method, seed=1, refine=False)
+        assert res.visited < res.space_size  # genuinely partial search
+        assert res.best.score >= 0.9 * best_ex, (method, res.best.score, best_ex)
+
+
+def test_workload_strategy_selection_tracks_gap_scale():
+    """Short gaps → idle/slow-down wins; very long gaps → on-off/adaptive."""
+    prof_est = BACKEND.evaluate(DesignPoint.of(n_mac=24, n_act=8, act_impl="hard",
+                                               pipelined=True))
+    tau_scale = prof_est.cfg_energy_j / prof_est.power_idle_w
+    short = ApplicationSpec(goal="energy_efficiency",
+                            gaps=np.full(200, 0.05 * tau_scale))
+    long_ = ApplicationSpec(goal="energy_efficiency",
+                            gaps=np.full(200, 50.0 * tau_scale))
+    res_short = Generator(BACKEND, short).search(method="exhaustive", refine=False)
+    res_long = Generator(BACKEND, long_).search(method="exhaustive", refine=False)
+    assert res_short.best.strategy in ("idle_waiting", "slow_down", "adaptive")
+    # with huge gaps the winner must power off between requests
+    assert res_long.best.strategy in ("on_off", "adaptive", "slow_down")
+    e_short = res_short.best.metrics["energy_j"]
+    e_long = res_long.best.metrics["energy_j"]
+    assert e_long > e_short  # longer gaps always cost more energy
+
+
+def test_refinement_learns_tau_on_bursty_trace():
+    prof = AccelProfile.from_template(optimized_template(), W)
+    gaps = bursty_trace(prof, n=800, seed=2)
+    app = ApplicationSpec(goal="energy_efficiency", gaps=gaps)
+    gen = Generator(BACKEND, app, refine_k=1)
+    res_raw = gen.search(method="exhaustive", refine=False)
+    res_ref = gen.search(method="exhaustive", refine=True)
+    assert res_ref.best.score >= res_raw.best.score - 1e-12
+
+
+def test_pareto_contains_best():
+    res = Generator(BACKEND, scenario_continuous_throughput()).search(
+        method="exhaustive", refine=False
+    )
+    pareto_points = {p for p, _ in res.pareto}
+    # the scalar-goal winner need not be on the 3-objective front, but the
+    # front must be non-empty and all-feasible
+    assert pareto_points
+    ranked_points = {c.point for c in res.ranked}
+    assert pareto_points <= ranked_points

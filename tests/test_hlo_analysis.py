@@ -1,0 +1,70 @@
+"""HLO collective parser: canned-module unit tests (no compile needed)."""
+from repro.core.hlo import collective_stats, while_trip_counts
+
+MODULE = """
+HloModule jit_f, entry_computation_layout={()->f32[]}
+
+%body (param: (s32[], f32[64,512])) -> (s32[], f32[64,512]) {
+  %ag = f32[64,512]{1,0} all-gather(%slice), channel_id=1, replica_groups=[1,4]<=[4], dimensions={1}
+  %ar = f32[64,512]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %t = (s32[], f32[64,512]) tuple(%i, %ar)
+}
+
+%cond (param.1: (s32[], f32[64,512])) -> pred[] {
+  ROOT %cmp = pred[] compare(%a, %b), direction=LT
+}
+
+ENTRY %main (p0: f32[64,512]) -> f32[] {
+  %rs = f32[16,512]{1,0} reduce-scatter(%p0), channel_id=3, replica_groups=[1,4]<=[4], to_apply=%add
+  %w = (s32[], f32[64,512]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %cp = f32[16,512]{1,0} collective-permute(%rs), channel_id=4, source_target_pairs={{0,1},{1,2}}
+  ROOT %sum = f32[] reduce(%x, %c0), to_apply=%add
+}
+"""
+
+
+def test_trip_count_scaling():
+    stats = collective_stats(MODULE)
+    # body: AG result 64*512*4 = 131072 → operand 131072/4 = 32768; × 10 trips
+    assert stats.operand_bytes["all-gather"] == 32768 * 10
+    assert stats.counts["all-gather"] == 10
+    # body AR: operand == result == 131072; × 10
+    assert stats.operand_bytes["all-reduce"] == 131072 * 10
+    # entry reduce-scatter: result 16*512*4=32768 → operand ×4 groups = 131072
+    assert stats.operand_bytes["reduce-scatter"] == 131072
+    # collective-permute counted once, operand == result
+    assert stats.operand_bytes["collective-permute"] == 32768
+    assert while_trip_counts(MODULE) == [10]
+
+
+def test_async_start_done_counted_once():
+    mod = """
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %s = f32[8,8]{1,0} all-reduce-start(%p0), channel_id=1, replica_groups=[1,2]<=[2], to_apply=%add
+  ROOT %d = f32[8,8]{1,0} all-reduce-done(%s)
+}
+"""
+    stats = collective_stats(mod)
+    assert stats.counts["all-reduce"] == 1
+    assert stats.operand_bytes["all-reduce"] == 8 * 8 * 4
+
+
+def test_bf16_and_explicit_groups():
+    mod = """
+ENTRY %main (p0: bf16[128]) -> bf16[512] {
+  ROOT %ag = bf16[512]{0} all-gather(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+}
+"""
+    stats = collective_stats(mod)
+    # result 512*2 bytes, explicit groups of 4 → operand 1024/4 = 256
+    assert stats.operand_bytes["all-gather"] == 256
+
+
+def test_no_collectives():
+    mod = """
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  ROOT %t = f32[8]{0} tanh(%p0)
+}
+"""
+    stats = collective_stats(mod)
+    assert stats.total_bytes == 0 and not stats.counts

@@ -1,0 +1,137 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes, dtypes, and variant axes (the GHDL-simulation analogue)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.activations import activation
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.lstm_cell import lstm_cell_fused
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Activation variant kernels
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fn", ["sigmoid", "tanh", "silu", "gelu"])
+@pytest.mark.parametrize("impl", ["exact", "pwl", "lut", "hard"])
+@pytest.mark.parametrize("shape,dtype", [
+    ((64, 128), jnp.float32),
+    ((3, 33, 130), jnp.float32),   # ragged rows → padding path
+    ((128, 256), jnp.bfloat16),
+])
+def test_activation_kernel_matches_ref(fn, impl, shape, dtype):
+    x = (jax.random.normal(KEY, shape, jnp.float32) * 4.0).astype(dtype)
+    got = activation(x, fn=fn, impl=impl, block_rows=32, interpret=True)
+    want = ref.activation_ref(x, fn=fn, impl=impl)
+    assert got.shape == x.shape and got.dtype == x.dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_activation_variant_error_bounds():
+    """Measured max |variant − exact| stays within the documented bounds."""
+    from repro.models.activations import VARIANT_ERROR, get_sigmoid
+
+    x = jnp.linspace(-8.0, 8.0, 4001)
+    exact = jax.nn.sigmoid(x)
+    for impl in ("pwl", "lut", "hard"):
+        err = float(jnp.max(jnp.abs(get_sigmoid(impl)(x) - exact)))
+        assert err <= VARIANT_ERROR[impl] * 1.05, (impl, err)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kv,sq,sk,d,causal", [
+    (1, 4, 4, 128, 128, 32, True),
+    (2, 8, 2, 128, 128, 64, True),    # GQA 4:1
+    (1, 4, 1, 64, 256, 32, False),    # MQA, cross-shaped
+    (2, 2, 2, 256, 256, 16, True),
+])
+def test_flash_attention_matches_ref(b, h, kv, sq, sk, d, causal):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(k2, (b, kv, sk, d), jnp.float32)
+    v = jax.random.normal(k3, (b, kv, sk, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 4, 128, 32), jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 2, 128, 32), jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 2, 128, 32), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused LSTM cell (the paper's optimized template, C1/C2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["exact", "pwl", "lut", "hard"])
+@pytest.mark.parametrize("b,d,hidden", [(4, 6, 20), (33, 16, 32), (128, 64, 48)])
+def test_lstm_cell_matches_ref(impl, b, d, hidden):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, d), jnp.float32)
+    h = jax.random.normal(ks[1], (b, hidden), jnp.float32)
+    c = jax.random.normal(ks[2], (b, hidden), jnp.float32)
+    w = jax.random.normal(ks[3], (d, 4 * hidden), jnp.float32) * 0.3
+    u = jax.random.normal(ks[4], (hidden, 4 * hidden), jnp.float32) * 0.3
+    bias = jax.random.normal(ks[5], (4 * hidden,), jnp.float32) * 0.1
+    h_new, c_new = lstm_cell_fused(x, h, c, w, u, bias, impl=impl, block_b=32, interpret=True)
+    h_ref, c_ref = ref.lstm_cell_ref(x, h, c, w, u, bias, impl=impl)
+    np.testing.assert_allclose(np.asarray(h_new), np.asarray(h_ref), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(c_new), np.asarray(c_ref), atol=2e-5, rtol=2e-5)
+
+
+def test_lstm_layer_fused_equals_unfused():
+    """The paper's pipelined template computes the same function as the
+    minimal-ALU baseline template (RTL equivalence check)."""
+    from repro.models.lstm import lstm_apply, lstm_defs
+    from repro.models.params import init_params
+
+    defs = lstm_defs(6, 20)
+    params = init_params(defs, KEY)
+    params = jax.tree.map(lambda t: t.astype(jnp.float32), params)
+    x = jax.random.normal(KEY, (3, 28, 6), jnp.float32)
+    y_fused = lstm_apply(params, x, impl="exact", fused=True)
+    y_unfused = lstm_apply(params, x, impl="exact", fused=False)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_unfused), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Int8 matmul (precision axis)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 256, 128), (32, 64, 96)])
+def test_int8_matmul_matches_ref(m, k, n):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    xq, sx = ref.quantize_rowwise(x)
+    wq, sw = ref.quantize_colwise(w)
+    got = int8_matmul(xq, wq, sx, sw, block_m=32, block_n=32, block_k=32, interpret=True)
+    want = ref.int8_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_quantized_matmul_error_bound():
+    """End-to-end int8 quantized matmul error vs f32: bounded by ~1% rel."""
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (64, 256), jnp.float32)
+    w = jax.random.normal(k2, (256, 64), jnp.float32)
+    got = ops.quantized_matmul(x, w, block_m=32, block_n=32, block_k=64)
+    want = x @ w
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.02, rel

@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests: REDUCED config of the same family through
+one train step / prefill / decode on CPU, asserting shapes + no NaNs.
+(The FULL configs are exercised only via the dry-run — zero allocation.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, get_reduced_config, list_archs
+from repro.models.model import decode_step, init_model, prefill, train_loss
+from repro.models.params import init_params
+from repro.serving.kv_cache import cache_defs
+
+B, S = 2, 64
+ARCHS = list_archs()
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jnp.ones((B, cfg.frontend_seq, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "audio":
+        batch["frontend_embeds"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    for a in ARCHS:
+        full = get_config(a)
+        red = get_reduced_config(a)
+        assert full.family == red.family
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    loss, metrics = jax.jit(lambda p, b: train_loss(p, b, cfg))(params, _batch(cfg, key))
+    assert jnp.isfinite(loss), (arch, loss)
+    assert float(loss) > 0
+    assert jnp.isfinite(metrics["ce"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_prefill_and_decode(arch):
+    cfg = get_reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    batch = _batch(cfg, key)
+    logits, cache = jax.jit(
+        lambda p, t, f: prefill(p, t, cfg, frontend_embeds=f)
+    )(params, batch["tokens"], batch.get("frontend_embeds"))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert jnp.isfinite(logits[:, : cfg.vocab_size]).all()
+
+    fresh = init_params(cache_defs(cfg, batch=B, max_len=S), key)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, c, t, pos: decode_step(p, c, t, pos, cfg)
+    )(params, fresh, tok, jnp.int32(0))
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert jnp.isfinite(logits2[:, : cfg.vocab_size]).all()
+    # cache structure is preserved by a decode step
+    assert jax.tree.structure(cache2) == jax.tree.structure(fresh)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-780m", "whisper-tiny"])
+def test_prefill_decode_consistency(arch):
+    """Greedy continuation via (prefill to t) must match (prefill to t-1,
+    then one decode step) — cache correctness across families."""
+    cfg = get_reduced_config(arch)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)  # tight comparison
+    key = jax.random.PRNGKey(1)
+    params = init_model(cfg, key)
+    # ParamDefs default to bf16 storage; promote for a tight numeric check
+    params = jax.tree.map(
+        lambda t: t.astype(jnp.float32) if t.dtype == jnp.bfloat16 else t, params
+    )
+    toks = jax.random.randint(key, (1, 17), 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend == "audio":
+        fe = jnp.ones((1, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+
+    logits_full, _ = prefill(params, toks, cfg, frontend_embeds=fe)
+
+    logits_part, cache = prefill(params, toks[:, :16], cfg, frontend_embeds=fe)
+    # grow cache so position 16 fits
+    def grow(x, axis, cap=32):
+        pad = cap - x.shape[axis]
+        if pad <= 0:
+            return x
+        w = [(0, 0)] * x.ndim
+        w[axis] = (0, pad)
+        return jnp.pad(x, w)
+
+    f = cfg.family
+    if f in ("dense", "vlm", "audio"):
+        cache = dict(cache, k=grow(cache["k"], 2), v=grow(cache["v"], 2))
+    logits_dec, _ = decode_step(params, cache, toks[:, 16:17], jnp.int32(16), cfg)
+
+    import numpy as np
+
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, : cfg.vocab_size]),
+        np.asarray(logits_full[:, : cfg.vocab_size]),
+        atol=2e-3, rtol=2e-3,
+    )
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the published dimensions against the assignment table."""
+    c = get_config("deepseek-v3-671b")
+    assert (c.num_layers, c.d_model, c.num_heads) == (61, 7168, 128)
+    assert c.moe.num_experts == 256 and c.moe.top_k == 8 and c.mla is not None and c.mtp
+    c = get_config("qwen1.5-110b")
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == (80, 8192, 49152, 152064)
+    assert c.qkv_bias
+    c = get_config("granite-34b")
+    assert c.num_kv_heads == 1  # MQA
+    c = get_config("zamba2-7b")
+    assert c.family == "hybrid" and c.attn_every == 6 and c.ssm.state_size == 64
+    c = get_config("mamba2-780m")
+    assert c.num_layers == 48 and c.ssm.state_size == 128
+    c = get_config("whisper-tiny")
+    assert c.encoder_layers == 4 and c.qkv_bias and c.tie_embeddings
+    c = get_config("internvl2-76b")
+    assert c.frontend == "vision" and c.frontend_seq == 256
+    c = get_config("granite-moe-3b-a800m")
+    assert c.moe.num_experts == 40 and c.moe.padded_experts == 48
+    c = get_config("starcoder2-15b")
+    assert c.num_kv_heads == 4
+    c = get_config("granite-3-8b")
+    assert c.d_ff == 12800
+
+
+def test_shape_skip_rules():
+    """long_500k runs only for SSM/hybrid (sub-quadratic decode)."""
+    for a in ARCHS:
+        cfg = get_config(a)
+        ok, why = cfg.supports("long_500k")
+        assert ok == (cfg.family in ("ssm", "hybrid")), (a, ok, why)
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cfg.supports(s)[0], (a, s)
+
+
+def test_param_counts_in_published_ballpark():
+    """Total parameters land near the names' advertised sizes."""
+    expect = {
+        "granite-3-8b": (7e9, 9.5e9),
+        "granite-34b": (30e9, 38e9),
+        "starcoder2-15b": (13e9, 17e9),
+        "qwen1.5-110b": (95e9, 120e9),
+        "internvl2-76b": (65e9, 80e9),  # LLM backbone (ViT stubbed)
+        "deepseek-v3-671b": (600e9, 700e9),
+        "mamba2-780m": (0.6e9, 0.95e9),
+        "zamba2-7b": (6e9, 8.5e9),
+        "whisper-tiny": (20e6, 60e6),
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+    }
+    for a, (lo, hi) in expect.items():
+        n = get_config(a).param_count()
+        assert lo <= n <= hi, (a, n / 1e9)
+
+
+def test_moe_active_params():
+    cfg = get_config("granite-moe-3b-a800m")
+    active = cfg.active_param_count()
+    assert active < cfg.param_count()
+    assert 0.5e9 <= active <= 1.5e9, active / 1e9  # "a800m" ≈ 0.8B active

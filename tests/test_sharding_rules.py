@@ -1,0 +1,86 @@
+"""Sharding rules: logical→mesh mapping, divisibility fallbacks, batch specs.
+
+Uses a stub mesh (only ``.shape`` is consulted by the pure rule functions),
+so no multi-device runtime is needed.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef
+from repro.sharding.rules import (
+    ShardingRules,
+    batch_axes,
+    batch_spec,
+    constrain,
+    spec_for,
+    tensor_parallel_rules,
+)
+
+
+class StubMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+SINGLE = StubMesh({"data": 16, "model": 16})
+MULTI = StubMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_tp_axes_shard_when_divisible():
+    rules = tensor_parallel_rules()
+    d = ParamDef((4096, 32, 128), ("embed", "heads", None))
+    assert spec_for(d, SINGLE, rules) == P(None, "model", None)
+    d_ff = ParamDef((4096, 12800), ("embed", "mlp"))
+    assert spec_for(d_ff, SINGLE, rules) == P(None, "model")
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    rules = tensor_parallel_rules()
+    # kv=1 (granite-34b MQA) cannot shard over a 16-way axis
+    d = ParamDef((6144, 1, 128), ("embed", "kv_heads", None))
+    assert spec_for(d, SINGLE, rules) == P(None, None, None)
+    # whisper: 6 heads over 16-way model → replicated
+    d = ParamDef((384, 6, 64), ("embed", "heads", None))
+    assert spec_for(d, SINGLE, rules) == P(None, None, None)
+
+
+def test_fsdp_shards_embed_axis_over_data():
+    no = tensor_parallel_rules(fsdp=False)
+    yes = tensor_parallel_rules(fsdp=True)
+    d = ParamDef((8192, 64, 128), ("embed", "heads", None))
+    assert spec_for(d, SINGLE, no) == P(None, "model", None)
+    assert spec_for(d, SINGLE, yes) == P("data", "model", None)
+
+
+def test_axis_used_only_once_per_tensor():
+    rules = tensor_parallel_rules()
+    # vocab and mlp both map to "model" — only the first dim gets it
+    d = ParamDef((51200, 12800), ("vocab", "mlp"))
+    sp = spec_for(d, SINGLE, rules)
+    assert sp == P("model", None)
+
+
+def test_stacked_layer_dim_never_sharded():
+    rules = tensor_parallel_rules()
+    d = ParamDef((40, 4096, 12800), ("layers", "embed", "mlp"))
+    assert spec_for(d, SINGLE, rules) == P(None, None, "model")
+
+
+def test_batch_axes_and_spec():
+    assert batch_axes(SINGLE) == ("data",)
+    assert batch_axes(MULTI) == ("pod", "data")
+    assert batch_spec(256, SINGLE) == P("data", None)
+    assert batch_spec(256, MULTI) == P(("pod", "data"), None)
+    # batch=1 (long_500k) cannot shard → fully replicated
+    assert batch_spec(1, MULTI) == P(None, None)
+    # extra dims
+    assert batch_spec(128, SINGLE, extra_dims=3) == P("data", None, None, None)
+
+
+def test_constrain_is_identity_without_mesh():
+    x = jnp.ones((4, 8))
+    y = constrain(x, ("batch", None))
+    assert y is x

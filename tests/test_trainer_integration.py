@@ -1,0 +1,64 @@
+"""End-to-end trainer integration: loss falls, failure-restart replays."""
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import SyntheticLM
+from repro.training.train_loop import Trainer, TrainerConfig
+
+
+def tiny_cfg() -> ArchConfig:
+    return ArchConfig(
+        name="tiny-lm", family="dense", num_layers=2, d_model=96,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256, remat="none",
+    )
+
+
+@pytest.fixture()
+def ckpt_dir(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def test_loss_decreases_and_survives_failure(ckpt_dir):
+    cfg = tiny_cfg()
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=48, global_batch=8,
+                     seed=0, branching=4)
+    tc = TrainerConfig(num_steps=40, log_every=5, checkpoint_every=10,
+                       checkpoint_dir=ckpt_dir, peak_lr=3e-3, warmup_steps=5)
+    tr = Trainer(cfg, ds, tc)
+    tr._failure_at = 23  # between checkpoints → must restore step 20 + replay
+    stats = tr.run()
+    assert stats["restarts"] == 1
+    losses = [m["loss"] for m in stats["metrics"]]
+    assert losses[-1] < losses[0] - 0.3, losses
+    assert np.isfinite(losses).all()
+
+
+def test_grad_accumulation_matches_single_batch():
+    """accum=2 over one batch == accum=1 (same grads, same update)."""
+    cfg = tiny_cfg()
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=1)
+    import jax
+
+    from repro.data.pipeline import make_batch
+    from repro.models.model import init_model, param_defs
+    from repro.models.params import init_params
+    from repro.training.optimizer import Schedule, init_opt_state
+    from repro.training.train_loop import make_train_step
+
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    params = jax.tree.map(lambda t: t.astype(jnp.float32), params)
+    opt = init_opt_state(cfg.optimizer, param_defs(cfg), params, key)
+    batch = make_batch(cfg, ds, 0)
+    sched = Schedule(peak_lr=1e-3, warmup_steps=0, total_steps=10)
+
+    p1, _, m1 = jax.jit(make_train_step(cfg, sched, accum=1))(params, opt, batch, jnp.int32(3))
+    p2, _, m2 = jax.jit(make_train_step(cfg, sched, accum=2))(params, opt, batch, jnp.int32(3))
+    # microbatch losses average to the same value and updates agree closely
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)

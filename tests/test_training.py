@@ -1,0 +1,225 @@
+"""Training substrate: optimizers, checkpoints, fault tolerance, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.data.pipeline import SyntheticLM, make_batch, unigram_entropy_bits
+from repro.models.model import param_defs
+from repro.models.params import init_params
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault import RestartPolicy, StragglerDetector, WorkerFailure, run_with_restarts
+from repro.training.optimizer import (
+    Schedule,
+    adafactor_state_defs,
+    adamw_state_defs,
+    clip_by_global_norm,
+    global_norm,
+    opt_state_defs,
+    opt_update,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+def _quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.5]), "b": jnp.ones((2, 4)) * 2.0}
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_decreases_quadratic(name):
+    params = _quadratic_params()
+    defs = jax.tree.map(
+        lambda t: __import__("repro.models.params", fromlist=["ParamDef"]).ParamDef(
+            t.shape, tuple([None] * t.ndim), dtype=t.dtype
+        ),
+        params,
+    )
+    from repro.training.optimizer import init_opt_state
+    state = init_opt_state(name, defs, params, KEY)
+
+    def loss(p):
+        return sum(jnp.sum(x * x) for x in jax.tree.leaves(p))
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt_update(name, params, g, state, 0.05)
+    assert float(loss(params)) < 0.2 * l0
+    assert int(state["step"]) == 60
+
+
+def test_adafactor_state_is_factored():
+    cfg = get_reduced_config("granite-3-8b")
+    defs = param_defs(cfg)
+    full = adamw_state_defs(defs)
+    fact = adafactor_state_defs(defs)
+    from repro.models.params import count_params
+
+    assert count_params(fact["vr"]) + count_params(fact["vc"]) < 0.2 * count_params(full["m"])
+
+
+def test_schedule_warmup_and_decay():
+    s = Schedule(peak_lr=1e-3, warmup_steps=10, total_steps=100, min_ratio=0.1)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(s(5)) == pytest.approx(5e-4, rel=1e-5)
+    assert float(s(100)) == pytest.approx(1e-4, rel=1e-3)
+    lrs = [float(s(t)) for t in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 10.0, "b": jnp.ones((5,)) * -10.0}
+    clipped, norm = clip_by_global_norm(tree, max_norm=1.0)
+    assert float(norm) == pytest.approx(float(global_norm(tree)))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.asarray([0.1])}
+    same, _ = clip_by_global_norm(small, max_norm=1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), [0.1], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_with_bf16(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {
+        "w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+        "opt": {"m": jnp.ones((2, 2), jnp.float32), "step": jnp.int32(7)},
+    }
+    mgr.save(5, tree, metadata={"loss": 1.25}, blocking=True)
+    step, restored, meta = mgr.restore(like=tree)
+    assert step == 5 and meta["loss"] == 1.25
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.latest_step() == 4
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_000003", "step_000004"]
+
+
+def test_torn_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.zeros(3)}
+    mgr.save(1, tree, blocking=True)
+    # fabricate a torn (uncommitted) later checkpoint
+    torn = tmp_path / "step_000002"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{}")
+    assert mgr.latest_step() == 1
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(step=2, like=tree)
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(5, dtype=jnp.float32)}
+    mgr.save(3, tree, blocking=False)
+    mgr.wait()
+    step, restored, _ = mgr.restore(like=tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(5, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+def test_straggler_detector_flags_persistent_slowdown():
+    det = StragglerDetector(warmup=5, patience=3, z_threshold=3.0)
+    fired = []
+    times = [0.10] * 20 + [0.50] * 6 + [0.10] * 5
+    for i, t in enumerate(times):
+        if det.observe(t):
+            fired.append(i)
+            det.reset()
+    assert fired and 22 <= fired[0] <= 25  # third consecutive slow step
+
+
+def test_straggler_detector_tolerates_jitter():
+    rng = np.random.default_rng(0)
+    det = StragglerDetector(warmup=5, patience=3)
+    for t in 0.1 + 0.01 * rng.standard_normal(200):
+        assert not det.observe(max(t, 0.05))
+
+
+def test_run_with_restarts_replays_from_checkpoint():
+    executed = []
+    state = {"restored_to": None}
+
+    def step_fn(step):
+        executed.append(step)
+        if step == 5 and state["restored_to"] is None:
+            raise WorkerFailure("boom")
+
+    def restore_fn():
+        state["restored_to"] = 3
+        return 3
+
+    stats = run_with_restarts(
+        step_fn, start_step=0, num_steps=8, restore_fn=restore_fn,
+        policy=RestartPolicy(max_restarts=2), sleep=lambda s: None,
+    )
+    assert stats["restarts"] == 1
+    assert executed == [0, 1, 2, 3, 4, 5, 3, 4, 5, 6, 7]  # deterministic replay
+
+
+def test_run_with_restarts_gives_up():
+    def step_fn(step):
+        raise WorkerFailure("always")
+
+    with pytest.raises(WorkerFailure):
+        run_with_restarts(
+            step_fn, start_step=0, num_steps=3, restore_fn=lambda: 0,
+            policy=RestartPolicy(max_restarts=2), sleep=lambda s: None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_distinct():
+    ds = SyntheticLM(vocab_size=128, seq_len=32, global_batch=8, seed=1, num_hosts=2)
+    a = ds.batch(step=3, host=0)
+    b = ds.batch(step=3, host=0)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = ds.batch(step=4, host=0)
+    d = ds.batch(step=3, host=1)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(d["tokens"]))
+
+
+def test_labels_are_next_tokens_from_chain():
+    ds = SyntheticLM(vocab_size=64, seq_len=16, global_batch=4, seed=0, branching=4)
+    batch = ds.batch(0)
+    toks, labels = np.asarray(batch["tokens"]), np.asarray(batch["labels"])
+    np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])  # shifted view
+    chain = ds._chain()
+    # every label is a legal successor of its token under the bigram chain
+    for b in range(toks.shape[0]):
+        for t in range(toks.shape[1]):
+            assert labels[b, t] in chain[toks[b, t]]
+    assert unigram_entropy_bits(ds) == 2.0
+
+
+def test_vlm_batch_masks_frontend_positions():
+    cfg = get_reduced_config("internvl2-76b")
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=2)
+    batch = make_batch(cfg, ds, step=0)
+    assert batch["frontend_embeds"].shape == (2, cfg.frontend_seq, cfg.d_model)
+    labels = np.asarray(batch["labels"])
+    assert (labels[:, : cfg.frontend_seq] == -1).all()
+    assert (labels[:, cfg.frontend_seq :] >= 0).all()
