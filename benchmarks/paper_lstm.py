@@ -3,6 +3,13 @@
 Rows: baseline template → per-lever ablation → the paper's optimized
 template → the Generator's best design (beyond-paper). Columns: latency,
 GOPS/s/W, resources, max activation error.
+
+Plus the TPU kernel mapping of the same story: the sequence-resident Pallas
+LSTM (``repro.kernels.lstm_seq`` — weights/LUT VMEM-resident across all
+timesteps, one batched input-projection matmul) timed against the per-step
+``pallas_call``+``jax.lax.scan`` baseline, both in the same execution mode
+with interleaved sampling and median-of-N per-call wall time.  Block sizes
+come from the ``repro.kernels.autotune`` roofline tuner (``block_b="auto"``).
 """
 import dataclasses
 
@@ -50,6 +57,15 @@ def rows():
     return out
 
 
+def tpu_kernel_compare(batch: int, seq: int, d_in: int, hidden: int,
+                       *, n: int = 33, impl: str = "exact"):
+    """Median per-call µs: sequence-resident kernel vs per-step scan path
+    (shared interleaved-sampling harness — see ``repro.kernels.bench``)."""
+    from repro.kernels.bench import compare_lstm_paths
+
+    return compare_lstm_paths(batch, seq, d_in, hidden, n=n, impl=impl)
+
+
 def run() -> dict:
     w = paper_workload()
     base, opt = baseline_template(), optimized_template()
@@ -68,10 +84,29 @@ def run() -> dict:
     for k, v in got.items():
         print(f"  {k}: {v:.2f} (published {PUBLISHED[k]:.2f}, "
               f"{(v / PUBLISHED[k] - 1) * 100:+.2f}%)")
+
+    # -- TPU kernel mapping: sequence residency vs per-step relaunch ---------
+    lw = paper_workload()
+    print("\nTPU Pallas mapping (median per-call µs, interleaved samples):")
+    print(f"{'shape':34s} {'seq-resident':>12s} {'per-step scan':>13s} {'speedup':>8s}")
+    paper_shape = (64, lw.seq, lw.d_in, lw.hidden)
+    scaled_shape = (32, 64, 16, 32)
+    seq_us_p, step_us_p = tpu_kernel_compare(*paper_shape)
+    seq_us, step_us = tpu_kernel_compare(*scaled_shape)
+    for shape, (a, b) in [(paper_shape, (seq_us_p, step_us_p)),
+                          (scaled_shape, (seq_us, step_us))]:
+        name = "B=%d S=%d D=%d H=%d" % shape
+        print(f"{name:34s} {a:12.0f} {b:13.0f} {b / a:7.2f}x")
     return {
         "C1_latency_reduction_pct": 100 * (1 - got["opt_us"] / got["base_us"]),
         "C2_ee_ratio": got["opt_ee"] / got["base_ee"],
         "generator_best_gops_w": table[-1]["gops_per_w"],
+        "tpu_seq_us": seq_us,
+        "tpu_step_us": step_us,
+        "tpu_seq_speedup": step_us / seq_us,
+        "tpu_seq_us_paper_shape": seq_us_p,
+        "tpu_step_us_paper_shape": step_us_p,
+        "tpu_seq_speedup_paper_shape": step_us_p / seq_us_p,
     }
 
 

@@ -1,13 +1,44 @@
 """Benchmark driver: one function per paper table (+ TPU extensions).
 
-Prints a ``name,us_per_call,derived`` CSV summary at the end (us_per_call =
-wall time of the whole table computation; derived = the table's headline
-reproduced number).
+Each table module's ``run()`` is timed with warmup + repeated runs; the
+MEDIAN wall time is reported (robust to first-call JIT compilation and
+scheduler noise).  Besides the human-readable CSV on stdout, the driver
+writes a ``BENCH_<timestamp>.json`` artifact (name, median_us, derived
+metrics per table) so the perf trajectory stays machine-readable across PRs:
+compare any two artifacts field-by-field to see what moved.
+
+Usage:
+  python benchmarks/run.py [--warmup 1] [--repeats 3] [--only NAME ...]
+                           [--out DIR]
 """
+import argparse
+import json
+import statistics
 import time
+from datetime import datetime, timezone
+from pathlib import Path
 
 
-def main() -> None:
+def time_module(mod, warmup: int, repeats: int):
+    """Median wall-time (µs) of ``mod.run()`` plus its derived metrics."""
+    for _ in range(warmup):
+        mod.run()
+    times, derived = [], {}
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        derived = mod.run() or {}
+        times.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(times), derived
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--only", nargs="*", help="run only benches whose name contains any of these")
+    ap.add_argument("--out", default=".", help="directory for the BENCH_*.json artifact")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         activation_variants,
         adaptive_threshold,
@@ -27,18 +58,35 @@ def main() -> None:
         ("generator_tpu_beyond", generator_tpu),
         ("roofline_report", roofline_report),
     ]
-    rows = []
+    if args.only:
+        benches = [(n, m) for n, m in benches if any(s in n for s in args.only)]
+        if not benches:
+            ap.error(f"--only {args.only} matches no benchmark")
+
+    results = []
     for name, mod in benches:
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
-        t0 = time.perf_counter()
-        derived = mod.run() or {}
-        us = (time.perf_counter() - t0) * 1e6
-        headline = next(iter(derived.items()), ("", float("nan")))
-        rows.append((name, us, f"{headline[0]}={headline[1]:.4g}"))
+        median_us, derived = time_module(mod, args.warmup, args.repeats)
+        results.append({
+            "name": name,
+            "median_us": median_us,
+            "derived": {k: float(v) for k, v in derived.items()},
+        })
 
-    print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.0f},{derived}")
+    print("\nname,median_us,derived")
+    for r in results:
+        headline = next(iter(r["derived"].items()), ("", float("nan")))
+        print(f"{r['name']},{r['median_us']:.0f},{headline[0]}={headline[1]:.4g}")
+
+    stamp = datetime.now(timezone.utc).strftime("%Y%m%d-%H%M%S")
+    artifact = Path(args.out) / f"BENCH_{stamp}.json"
+    artifact.write_text(json.dumps({
+        "timestamp_utc": stamp,
+        "warmup": args.warmup,
+        "repeats": args.repeats,
+        "results": results,
+    }, indent=1, sort_keys=True))
+    print(f"\nwrote {artifact}")
 
 
 if __name__ == "__main__":

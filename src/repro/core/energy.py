@@ -47,6 +47,7 @@ class TPUChip:
     peak_int8_ops: float = 394e12
     hbm_bw: float = 819e9            # bytes/s
     hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 16 * 1024**2   # on-chip vector memory per core (~16 MiB)
     ici_bw: float = 50e9             # bytes/s per link direction
     ici_links: int = 4               # 2D torus: 4 links per chip
     p_idle_w: float = 75.0

@@ -110,29 +110,37 @@ def gap_energy_adaptive(gap: float, tau: float, p: AccelProfile) -> float:
 
 def simulate(gaps: np.ndarray, strategy: str, p: AccelProfile, *,
              tau: float | None = None, max_stretch: float | None = None) -> SimResult:
-    """One inference per request; ``gaps[i]`` is the idle time after item i."""
+    """One inference per request; ``gaps[i]`` is the idle time after item i.
+
+    Fully numpy-vectorized (the per-gap arithmetic matches the scalar
+    ``gap_energy_*`` helpers above): the Generator's strategy scoring calls
+    this once per (candidate × trace), so cost must not scale with trace
+    length in Python-interpreter time.
+    """
+    g = np.asarray(gaps, dtype=float).ravel()
+    n = g.size
     e_inf = p.p_active_w * p.t_inf_s
-    energy = p.e_cfg_j + e_inf * len(gaps)  # initial configuration + inferences
-    missed = 0
-    for g in np.asarray(gaps, dtype=float):
-        if strategy == "on_off":
-            energy += gap_energy_on_off(g, p)
-            if p.t_cfg_s + p.t_inf_s > g:
-                missed += 1  # reconfiguration overruns the request period
-        elif strategy == "idle_waiting":
-            energy += gap_energy_idle(g, p)
-            if p.t_inf_s > g:
-                missed += 1
-        elif strategy == "slow_down":
-            energy += gap_energy_slow_down(g, p, max_stretch)
-        elif strategy == "adaptive":
-            assert tau is not None
-            energy += gap_energy_adaptive(g, tau, p)
-            if g > tau and p.t_cfg_s + p.t_inf_s > g - tau:
-                missed += 1
-        else:
-            raise ValueError(strategy)
-    return SimResult(len(gaps), energy, float(np.sum(gaps) + len(gaps) * p.t_inf_s), missed)
+    base = p.e_cfg_j + e_inf * n  # initial configuration + inferences
+    if strategy == "on_off":
+        gap_e = np.full(n, p.e_cfg_j)
+        # reconfiguration overruns the request period
+        missed = int(np.count_nonzero(p.t_cfg_s + p.t_inf_s > g))
+    elif strategy == "idle_waiting":
+        gap_e = p.p_idle_w * g
+        missed = int(np.count_nonzero(p.t_inf_s > g))
+    elif strategy == "slow_down":
+        s = g if max_stretch is None else np.minimum(g, max(max_stretch, 0.0))
+        gap_e = p.static_w * s + p.p_idle_w * (g - s)
+        missed = 0
+    elif strategy == "adaptive":
+        assert tau is not None
+        off = g > tau
+        gap_e = np.where(off, p.p_idle_w * tau + p.e_cfg_j, p.p_idle_w * g)
+        missed = int(np.count_nonzero(off & (p.t_cfg_s + p.t_inf_s > g - tau)))
+    else:
+        raise ValueError(strategy)
+    energy = base + float(np.sum(gap_e))
+    return SimResult(n, energy, float(np.sum(g) + n * p.t_inf_s), missed)
 
 
 # ---------------------------------------------------------------------------

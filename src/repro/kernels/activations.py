@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
 from repro.models.activations import LUT_RANGE, LUT_SIZE
 
 
@@ -103,14 +104,7 @@ def _sigmoid_table():
 
 
 @functools.partial(jax.jit, static_argnames=("fn", "impl", "block_rows", "interpret"))
-def activation(x, *, fn: str = "sigmoid", impl: str = "exact",
-               block_rows: int = 256, interpret: bool = True):
-    """Elementwise activation variant as a Pallas kernel.
-
-    x is treated as (rows, lanes) after flattening; rows are tiled in VMEM
-    blocks of ``block_rows``. Lane dim should be a multiple of 128 on real
-    TPU (any size works in interpret mode).
-    """
+def _activation_call(x, *, fn: str, impl: str, block_rows: int, interpret: bool):
     shape = x.shape
     lanes = shape[-1]
     x2 = x.reshape(-1, lanes)
@@ -135,3 +129,17 @@ def activation(x, *, fn: str = "sigmoid", impl: str = "exact",
     if pad:
         out = out[:rows]
     return out.reshape(shape)
+
+
+def activation(x, *, fn: str = "sigmoid", impl: str = "exact",
+               block_rows: int = 256, interpret: bool | None = None):
+    """Elementwise activation variant as a Pallas kernel.
+
+    x is treated as (rows, lanes) after flattening; rows are tiled in VMEM
+    blocks of ``block_rows``. Lane dim should be a multiple of 128 on real
+    TPU (any size works in interpret mode). ``interpret=None`` resolves via
+    ``runtime.default_interpret()`` — in this unjitted wrapper, so env
+    overrides take effect per call, not per trace.
+    """
+    return _activation_call(x, fn=fn, impl=impl, block_rows=block_rows,
+                            interpret=resolve_interpret(interpret))

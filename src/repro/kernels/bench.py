@@ -1,0 +1,46 @@
+"""Shared micro-benchmark harness for the LSTM kernel mappings.
+
+Wall-clock on shared CPU hosts is noisy (±50% per sample), so both paths
+are sampled INTERLEAVED — scheduler drift hits each equally — and the
+median per-call time is reported.  Compilation happens outside the timed
+region.  Used by ``benchmarks/paper_lstm.py`` and the
+``repro.launch.train --paper-lstm`` plan so the methodology cannot drift
+between the two.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+
+def compare_lstm_paths(batch: int, seq: int, d_in: int, hidden: int,
+                       *, n: int = 33, impl: str = "exact"):
+    """Median per-call µs of (sequence-resident kernel, per-step scan path).
+
+    Both run in the same execution mode (interpret on CPU, Mosaic on TPU)
+    and both get autotuned block sizes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.lstm import lstm_apply, lstm_defs
+    from repro.models.params import init_params
+
+    key = jax.random.PRNGKey(0)
+    params = jax.tree.map(
+        lambda t: t.astype(jnp.float32), init_params(lstm_defs(d_in, hidden), key)
+    )
+    x = jax.random.normal(key, (batch, seq, d_in), jnp.float32)
+    seq_fn = jax.jit(lambda p, xx: lstm_apply(p, xx, impl=impl, fused="pallas_seq"))
+    step_fn = jax.jit(lambda p, xx: lstm_apply(p, xx, impl=impl, fused="pallas_step"))
+    seq_fn(params, x).block_until_ready()   # compile outside the timed region
+    step_fn(params, x).block_until_ready()
+    t_seq, t_step = [], []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        seq_fn(params, x).block_until_ready()
+        t_seq.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        step_fn(params, x).block_until_ready()
+        t_step.append(time.perf_counter() - t0)
+    return statistics.median(t_seq) * 1e6, statistics.median(t_step) * 1e6

@@ -10,6 +10,10 @@ and write-out (last KV step).
 
 Layouts: q (B, H, Sq, D); k/v (B, KV, Sk, D); GQA ratio g = H // KV resolved
 in the k/v index_map (q head h reads kv head h // g).
+
+``interpret=None`` resolves via ``runtime.default_interpret()``;
+``block_q/block_k = "auto"`` route through the ``repro.kernels.autotune``
+roofline tuner (candidates must divide Sq/Sk — this kernel does not pad).
 """
 from __future__ import annotations
 
@@ -18,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 NEG_INF = -1e30
 LANES = 128  # f32 scratch min lane width on TPU
@@ -70,9 +76,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(
     jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
 )
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
-                    block_k: int = 512, interpret: bool = True):
-    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) → (B, H, Sq, D)."""
+def _flash_attention_call(q, k, v, *, causal: bool, block_q: int,
+                          block_k: int, interpret: bool):
     b, h, sq, d = q.shape
     kv, sk = k.shape[1], k.shape[2]
     g = h // kv
@@ -104,3 +109,22 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int | str = 512,
+                    block_k: int | str = 512, interpret: bool | None = None):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) → (B, H, Sq, D)."""
+    interpret = resolve_interpret(interpret)
+    if "auto" in (block_q, block_k):
+        from repro.kernels.autotune import autotune
+
+        b, h, sq, d = q.shape
+        cfg = autotune(
+            "flash_attention",
+            {"b": b, "h": h, "sq": sq, "sk": k.shape[2], "d": d},
+            dtype=str(q.dtype),
+        )
+        block_q = cfg["block_q"] if block_q == "auto" else block_q
+        block_k = cfg["block_k"] if block_k == "auto" else block_k
+    return _flash_attention_call(q, k, v, causal=causal, block_q=int(block_q),
+                                 block_k=int(block_k), interpret=interpret)

@@ -10,6 +10,10 @@ in the f32 epilogue.
 Grid (M/bm, N/bn, K/bk) with the K loop innermost (sequential on TPU); an
 int32 VMEM scratch accumulates partial products; the scale epilogue runs on
 the last K step.
+
+``interpret=None`` resolves via ``runtime.default_interpret()``;
+``block_* = "auto"`` routes through the ``repro.kernels.autotune`` roofline
+tuner (candidates must divide M/N/K exactly — this kernel does not pad).
 """
 from __future__ import annotations
 
@@ -19,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, num_k: int):
@@ -44,9 +50,8 @@ def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, num_k: int):
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
 )
-def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
-                block_n: int = 256, block_k: int = 256, interpret: bool = True):
-    """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: (M, 1) f32; w_scale: (N,) f32."""
+def _int8_matmul_call(x_q, w_q, x_scale, w_scale, *, block_m: int,
+                      block_n: int, block_k: int, interpret: bool):
     m, k = x_q.shape
     n = w_q.shape[1]
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
@@ -68,3 +73,23 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int = 256,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_q, w_q, x_scale, w_scale)
+
+
+def int8_matmul(x_q, w_q, x_scale, w_scale, *, block_m: int | str = 256,
+                block_n: int | str = 256, block_k: int | str = 256,
+                interpret: bool | None = None):
+    """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: (M, 1) f32; w_scale: (N,) f32."""
+    interpret = resolve_interpret(interpret)
+    if "auto" in (block_m, block_n, block_k):
+        from repro.kernels.autotune import autotune
+
+        m, k = x_q.shape
+        n = w_q.shape[1]
+        cfg = autotune("int8_matmul", {"m": m, "k": k, "n": n}, dtype="int8")
+        block_m = cfg["block_m"] if block_m == "auto" else block_m
+        block_n = cfg["block_n"] if block_n == "auto" else block_n
+        block_k = cfg["block_k"] if block_k == "auto" else block_k
+    return _int8_matmul_call(
+        x_q, w_q, x_scale, w_scale, block_m=int(block_m), block_n=int(block_n),
+        block_k=int(block_k), interpret=interpret,
+    )

@@ -13,6 +13,16 @@ activations (RQ1 variants). On TPU that maps to:
 Grid walks batch blocks; weights stay resident in VMEM across the grid
 (embedded-scale LSTMs: D, H ≤ a few hundred — the whole working set fits,
 mirroring the paper's on-chip BRAM residency).
+
+This is the SINGLE-STEP kernel: driving it from ``jax.lax.scan`` re-streams
+the weights from HBM every timestep.  ``repro.kernels.lstm_seq`` extends the
+residency across the whole sequence (one ``pallas_call`` for all steps) —
+prefer it for full-sequence work; this cell remains the decode-style
+single-step primitive and the scan baseline the benchmarks compare against.
+
+``interpret=None`` resolves via ``runtime.default_interpret()`` (Mosaic on
+real TPU, interpreter elsewhere); ``block_b="auto"`` routes through the
+``repro.kernels.autotune`` roofline tuner.
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.activations import _apply_variant, _sigmoid_table
+from repro.kernels.runtime import resolve_interpret
 
 
 def _kernel(x_ref, h_ref, c_ref, w_ref, u_ref, b_ref, table_ref,
@@ -55,9 +66,7 @@ def _kernel(x_ref, h_ref, c_ref, w_ref, u_ref, b_ref, table_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_b", "interpret"))
-def lstm_cell_fused(x, h, c, w, u, b, *, impl: str = "exact",
-                    block_b: int = 128, interpret: bool = True):
-    """x: (B, D); h/c: (B, H); w: (D, 4H); u: (H, 4H); b: (4H,)."""
+def _lstm_cell_call(x, h, c, w, u, b, *, impl: str, block_b: int, interpret: bool):
     bsz, d = x.shape
     hidden = h.shape[1]
     bb = min(block_b, bsz)
@@ -95,3 +104,20 @@ def lstm_cell_fused(x, h, c, w, u, b, *, impl: str = "exact",
     if pad:
         h_new, c_new = h_new[:bsz], c_new[:bsz]
     return h_new, c_new
+
+
+def lstm_cell_fused(x, h, c, w, u, b, *, impl: str = "exact",
+                    block_b: int | str = 128, interpret: bool | None = None):
+    """x: (B, D); h/c: (B, H); w: (D, 4H); u: (H, 4H); b: (4H,)."""
+    interpret = resolve_interpret(interpret)
+    if block_b == "auto":
+        from repro.kernels.autotune import autotune
+
+        cfg = autotune(
+            "lstm_cell",
+            {"batch": x.shape[0], "d_in": x.shape[1], "hidden": h.shape[1]},
+            dtype=str(x.dtype),
+        )
+        block_b = cfg["block_b"]
+    return _lstm_cell_call(x, h, c, w, u, b, impl=impl, block_b=int(block_b),
+                           interpret=interpret)

@@ -1,13 +1,15 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public wrappers over the Pallas kernels.
 
-``INTERPRET`` defaults to True (this container is CPU-only; interpret mode
-executes the kernel bodies in Python for correctness validation). On real
-TPU set ``repro.kernels.ops.INTERPRET = False`` (or the REPRO_INTERPRET env
-var) and the same calls lower through Mosaic.
+Execution mode is resolved per call by ``repro.kernels.runtime``: Mosaic on
+a real TPU backend, the interpreter elsewhere, overridable via
+``REPRO_PALLAS_INTERPRET`` (legacy alias ``REPRO_INTERPRET``). Setting the
+module attribute ``INTERPRET`` to a bool still force-overrides everything
+(back-compat escape hatch); leave it ``None`` for auto.
+
+Block sizes default to ``"auto"`` here: shapes route through the
+``repro.kernels.autotune`` roofline tuner (cached per shape/dtype/backend).
 """
 from __future__ import annotations
-
-import os
 
 import jax.numpy as jnp
 
@@ -15,24 +17,37 @@ from repro.kernels.activations import activation as _activation
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import int8_matmul as _int8_matmul
 from repro.kernels.lstm_cell import lstm_cell_fused as _lstm_cell
+from repro.kernels.lstm_seq import lstm_seq_fused as _lstm_seq
 from repro.kernels.ref import quantize_colwise, quantize_rowwise
 
-INTERPRET = os.environ.get("REPRO_INTERPRET", "1") != "0"
+# None → per-call auto-resolution (runtime.default_interpret); bool → forced.
+INTERPRET: bool | None = None
 
 
 def activation(x, *, fn: str = "sigmoid", impl: str = "exact", block_rows: int = 256):
     return _activation(x, fn=fn, impl=impl, block_rows=block_rows, interpret=INTERPRET)
 
 
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512, block_k: int = 512):
-    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=INTERPRET)
+def flash_attention(q, k, v, *, causal: bool = True, block_q="auto", block_k="auto"):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=INTERPRET)
 
 
-def lstm_cell(x, h, c, w, u, b, *, impl: str = "exact", block_b: int = 128):
-    return _lstm_cell(x, h, c, w, u, b, impl=impl, block_b=block_b, interpret=INTERPRET)
+def lstm_cell(x, h, c, w, u, b, *, impl: str = "exact", block_b="auto"):
+    return _lstm_cell(x, h, c, w, u, b, impl=impl, block_b=block_b,
+                      interpret=INTERPRET)
+
+
+def lstm_seq(x, w, u, b, *, impl: str = "exact", block_b="auto",
+             return_state: bool = False):
+    """Sequence-resident fused LSTM: x (B, S, D) → hs (B, S, H)."""
+    return _lstm_seq(x, w, u, b, impl=impl, block_b=block_b,
+                     interpret=INTERPRET, return_state=return_state)
 
 
 def int8_matmul(x_q, w_q, x_scale, w_scale, **kw):
+    for k in ("block_m", "block_n", "block_k"):
+        kw.setdefault(k, "auto")
     return _int8_matmul(x_q, w_q, x_scale, w_scale, interpret=INTERPRET, **kw)
 
 

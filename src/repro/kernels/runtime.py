@@ -1,0 +1,50 @@
+"""Shared Pallas runtime policy: where do kernels actually execute?
+
+Every kernel in this package takes ``interpret: bool | None = None`` and
+resolves ``None`` through :func:`default_interpret` — True (Python/XLA
+interpreter, correct everywhere) unless a real TPU backend is attached, in
+which case the same calls lower through Mosaic.  The decision is overridable
+for debugging/CI via environment variables, checked in order:
+
+  REPRO_PALLAS_INTERPRET   "1"/"true" force interpret, "0"/"false" force Mosaic
+  REPRO_INTERPRET          legacy alias, same semantics
+
+Centralizing this here means no kernel hard-codes ``interpret=True`` and a
+TPU host gets compiled kernels with zero call-site changes.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+_FALSY = ("0", "false", "no", "off")
+
+
+@functools.lru_cache(maxsize=None)
+def has_tpu_backend() -> bool:
+    """True when the default JAX backend is a real TPU."""
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:  # no backend at all — interpret is the only option
+        return False
+
+
+def default_interpret() -> bool:
+    """Resolve the interpret-mode default (env override > backend sniff)."""
+    for var in ("REPRO_PALLAS_INTERPRET", "REPRO_INTERPRET"):
+        env = os.environ.get(var)
+        if env is not None:
+            return env.strip().lower() not in _FALSY
+    return not has_tpu_backend()
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → :func:`default_interpret`; booleans pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def backend_key() -> str:
+    """Short backend tag used in autotune cache keys."""
+    return "tpu" if has_tpu_backend() else "interpret"

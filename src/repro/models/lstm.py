@@ -1,17 +1,26 @@
 """LSTM layer — the paper's flagship accelerator target (refs [2,5,20]).
 
-The RTL-template story maps onto two JAX execution paths:
+The RTL-template story maps onto four JAX execution paths, selected by the
+``fused`` argument of :func:`lstm_apply`:
 
-  unfused — four separate gate matmuls + separate activation calls; this is
-            the "minimal-ALU, reuse-over-time" baseline design the paper
-            compares against (resource-frugal, slow).
-  fused   — one (d_in+hidden, 4·hidden) MXU matmul for all gates with the
-            gate activations fused into the epilogue; this is the paper's
-            optimized pipelined template (C1/C2: −47% latency, 2.33× GOPS/W).
-            ``repro.kernels.lstm_cell`` lowers this exact cell as a Pallas
-            TPU kernel with VMEM BlockSpecs.
+  False          — four separate gate matmuls + separate activation calls;
+                   the "minimal-ALU, reuse-over-time" baseline design the
+                   paper compares against (resource-frugal, slow).
+  True           — one (d_in+hidden, 4·hidden) MXU matmul for all gates with
+                   the gate activations fused into the epilogue, under
+                   ``jax.lax.scan``; the paper's optimized pipelined template
+                   (C1/C2: −47% latency, 2.33× GOPS/W) left to XLA.
+  "pallas_step"  — the same scan, but each step is the Pallas
+                   ``repro.kernels.lstm_cell`` kernel: weights re-streamed
+                   from HBM every timestep (the pre-residency mapping; kept
+                   as the benchmark baseline and decode-style primitive).
+  "pallas_seq"   — ONE ``pallas_call`` for the whole sequence
+                   (``repro.kernels.lstm_seq``): weights/bias/LUT stay
+                   VMEM-resident across all timesteps, h/c carried in VMEM
+                   scratch — the paper's on-chip BRAM residency mapped onto
+                   TPU VMEM. Preferred full-sequence path.
 
-Both paths honour the activation-implementation axis (RQ1): sigmoid/tanh in
+All paths honour the activation-implementation axis (RQ1): sigmoid/tanh in
 {exact, pwl, lut, hard} variants from ``repro.models.activations``.
 """
 from __future__ import annotations
@@ -21,6 +30,8 @@ import jax.numpy as jnp
 
 from repro.models.activations import get_sigmoid, get_tanh
 from repro.models.params import ParamDef
+
+PALLAS_PATHS = ("pallas_seq", "pallas_step")
 
 
 def lstm_defs(d_in: int, hidden: int) -> dict:
@@ -53,17 +64,54 @@ def lstm_cell(params, x_t, h, c, *, impl: str = "exact", fused: bool = True):
     return h_new, c_new
 
 
-def lstm_apply(params, x, *, impl: str = "exact", fused: bool = True):
-    """Full-sequence LSTM. x: (B, S, D_in) → (B, S, H)."""
+def lstm_apply(params, x, *, impl: str = "exact", fused: bool | str = True,
+               block_b: int | str = "auto"):
+    """Full-sequence LSTM. x: (B, S, D_in) → (B, S, H).
+
+    ``fused`` ∈ {False, True, "pallas_step", "pallas_seq"} — see the module
+    docstring. ``block_b`` only applies to the Pallas paths.
+    """
+    if fused == "pallas_seq":
+        from repro.kernels import ops
+
+        return ops.lstm_seq(
+            x, params["w"], params["u"], params["b"], impl=impl, block_b=block_b
+        )
+
     b = x.shape[0]
     hidden = params["u"].shape[0]
     h0 = jnp.zeros((b, hidden), x.dtype)
     c0 = jnp.zeros((b, hidden), x.dtype)
 
-    def step(carry, x_t):
-        h, c = carry
-        h, c = lstm_cell(params, x_t, h, c, impl=impl, fused=fused)
-        return (h, c), h
+    if fused == "pallas_step":
+        from repro.kernels import ops
+
+        # Resolve "auto" once, outside the scan trace (autotune does disk IO).
+        if block_b == "auto":
+            from repro.kernels.autotune import autotune
+
+            block_b = autotune(
+                "lstm_cell",
+                {"batch": b, "d_in": x.shape[2], "hidden": hidden},
+                dtype=str(x.dtype),
+            )["block_b"]
+
+        def step(carry, x_t):
+            h, c = carry
+            h, c = ops.lstm_cell(
+                x_t, h, c, params["w"], params["u"], params["b"],
+                impl=impl, block_b=int(block_b),
+            )
+            return (h, c), h
+
+    elif isinstance(fused, str):
+        raise ValueError(f"unknown fused mode {fused!r}")
+    else:
+
+        def step(carry, x_t):
+            h, c = carry
+            h, c = lstm_cell(params, x_t, h, c, impl=impl, fused=fused)
+            return (h, c), h
 
     (_, _), hs = jax.lax.scan(step, (h0, c0), x.swapaxes(0, 1))
     return hs.swapaxes(0, 1)

@@ -27,10 +27,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamDef
+from repro.sharding.compat import shard_map
 from repro.sharding.rules import active_mesh, batch_axes
 
 
@@ -277,7 +279,7 @@ def moe_apply(params, x, cfg: ArchConfig):
 
     fn = partial(_moe_sharded_body, cfg=cfg, mesh=mesh, ep_axes=ep_axes,
                  mode=mode, tp_split=tp_split)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         fn, mesh=mesh,
         in_specs=(pspec, x_spec),
         out_specs=(x_spec, P()),

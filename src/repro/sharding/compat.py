@@ -1,0 +1,22 @@
+"""JAX version compatibility for shard_map.
+
+Newer JAX exposes ``jax.shard_map(..., check_vma=...)``; the pinned 0.4.x
+only has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+Call sites use this wrapper with the new-style ``check_vma`` keyword and it
+translates for whichever API the installed JAX provides.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

@@ -26,8 +26,10 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.sharding.compat import shard_map
 from repro.sharding.rules import batch_axes
 
 
@@ -85,7 +87,7 @@ def dp_value_and_grad(
         return loss, grads
 
     out_specs = (P(), P(), P()) if has_aux else (P(), P())
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(dp_spec)),

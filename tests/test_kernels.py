@@ -96,6 +96,77 @@ def test_lstm_cell_matches_ref(impl, b, d, hidden):
     np.testing.assert_allclose(np.asarray(c_new), np.asarray(c_ref), atol=2e-5, rtol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# Sequence-resident fused LSTM (whole recurrence in one pallas_call)
+# ---------------------------------------------------------------------------
+def _lstm_scan_ref(x, w, u, bias, impl):
+    """lax.scan over the per-step jnp oracle — the ground truth recurrence."""
+    b, s, _ = x.shape
+    hidden = u.shape[0]
+    h = jnp.zeros((b, hidden), x.dtype)
+    c = jnp.zeros((b, hidden), x.dtype)
+    hs = []
+    for t in range(s):
+        h, c = ref.lstm_cell_ref(x[:, t], h, c, w, u, bias, impl=impl)
+        hs.append(h)
+    return jnp.stack(hs, axis=1), h, c
+
+
+@pytest.mark.parametrize("impl", ["exact", "pwl", "lut", "hard"])
+@pytest.mark.parametrize("b,s,d,hidden,block_b", [
+    (4, 7, 6, 20, 4),      # block divides batch, odd seq
+    (5, 9, 6, 20, 2),      # non-divisible batch → padding path
+    (33, 28, 16, 32, 16),  # paper-scale seq, ragged batch
+])
+def test_lstm_seq_matches_scan_ref(impl, b, s, d, hidden, block_b):
+    from repro.kernels.lstm_seq import lstm_seq_fused
+
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, 4 * hidden), jnp.float32) * 0.3
+    u = jax.random.normal(ks[2], (hidden, 4 * hidden), jnp.float32) * 0.3
+    bias = jax.random.normal(ks[3], (4 * hidden,), jnp.float32) * 0.1
+    hs, (hn, cn) = lstm_seq_fused(
+        x, w, u, bias, impl=impl, block_b=block_b, interpret=True, return_state=True
+    )
+    hs_ref, h_ref, c_ref = _lstm_scan_ref(x, w, u, bias, impl)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_ref), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(hn), np.asarray(h_ref), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(cn), np.asarray(c_ref), atol=2e-5, rtol=2e-5)
+
+
+def test_lstm_apply_paths_agree():
+    """All four lstm_apply execution paths compute the same function."""
+    from repro.models.lstm import lstm_apply, lstm_defs
+    from repro.models.params import init_params
+
+    params = init_params(lstm_defs(6, 20), KEY)
+    params = jax.tree.map(lambda t: t.astype(jnp.float32), params)
+    x = jax.random.normal(KEY, (3, 11, 6), jnp.float32)
+    want = lstm_apply(params, x, fused=True)
+    for fused in (False, "pallas_step", "pallas_seq"):
+        got = lstm_apply(params, x, fused=fused)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5, err_msg=str(fused)
+        )
+    with pytest.raises(ValueError):
+        lstm_apply(params, x, fused="not-a-mode")
+
+
+def test_lstm_seq_auto_block():
+    """block_b='auto' routes through the autotuner and stays correct."""
+    from repro.kernels.lstm_seq import lstm_seq_fused
+
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (10, 5, 8), jnp.float32)
+    w = jax.random.normal(ks[1], (8, 64), jnp.float32) * 0.3
+    u = jax.random.normal(ks[2], (16, 64), jnp.float32) * 0.3
+    bias = jnp.zeros((64,), jnp.float32)
+    hs = lstm_seq_fused(x, w, u, bias, block_b="auto", interpret=True)
+    hs_ref, _, _ = _lstm_scan_ref(x, w, u, bias, "exact")
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_ref), atol=2e-5, rtol=2e-5)
+
+
 def test_lstm_layer_fused_equals_unfused():
     """The paper's pipelined template computes the same function as the
     minimal-ALU baseline template (RTL equivalence check)."""

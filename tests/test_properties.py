@@ -4,6 +4,9 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.candidates import DesignPoint, DesignSpace, Estimate, pareto_front
