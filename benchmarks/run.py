@@ -46,6 +46,7 @@ def main(argv=None) -> None:
         generator_tpu,
         paper_lstm,
         roofline_report,
+        serve_bench,
         workload_strategies,
     )
 
@@ -57,6 +58,7 @@ def main(argv=None) -> None:
         ("generator_fpga_RQ3", generator_fpga),
         ("generator_tpu_beyond", generator_tpu),
         ("roofline_report", roofline_report),
+        ("serve_continuous_batching", serve_bench),
     ]
     if args.only:
         benches = [(n, m) for n, m in benches if any(s in n for s in args.only)]

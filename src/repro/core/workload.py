@@ -162,25 +162,35 @@ def break_even_tau(p: AccelProfile) -> float:
     return p.e_cfg_j / p.p_idle_w
 
 
-def _soft_energy(tau, gaps, p: AccelProfile, beta: float = 0.02):
-    """Differentiable relaxation of gap_energy_adaptive (sigmoid switch)."""
+def _soft_energy(tau, gaps, p: AccelProfile, beta: float = 0.02, weights=None):
+    """Differentiable relaxation of gap_energy_adaptive (sigmoid switch).
+
+    ``weights`` (same shape as ``gaps``) turns the mean into a weighted mean
+    — the online streaming-τ policy uses exponential recency weights so the
+    fit tracks the CURRENT gap regime."""
     go_off = jax.nn.sigmoid((gaps - tau) / beta)
     e_idle = p.p_idle_w * gaps
     e_off = p.p_idle_w * tau + p.e_cfg_j
-    return jnp.mean(go_off * e_off + (1.0 - go_off) * e_idle)
+    e = go_off * e_off + (1.0 - go_off) * e_idle
+    if weights is None:
+        return jnp.mean(e)
+    return jnp.sum(weights * e) / jnp.maximum(jnp.sum(weights), 1e-30)
 
 
 def learn_tau(gaps, p: AccelProfile, *, steps: int = 600, lr: float = 0.05,
-              tau0: float | None = None, beta0: float = 0.05, beta1: float = 0.002) -> float:
+              tau0: float | None = None, beta0: float = 0.05, beta1: float = 0.002,
+              weights=None) -> float:
     """Gradient-train the switching threshold on an observed gap history.
 
     The sigmoid temperature β is annealed (geometric beta0 → beta1): a warm
     start smooths the loss landscape, the cold finish sharpens the decision
     boundary onto the true piecewise-linear energy curve."""
     gaps = jnp.asarray(gaps, jnp.float32)
+    if weights is not None:
+        weights = jnp.asarray(weights, jnp.float32)
     log_tau = jnp.log(jnp.asarray(tau0 if tau0 is not None else break_even_tau(p), jnp.float32))
 
-    grad = jax.jit(jax.grad(lambda lt, beta: _soft_energy(jnp.exp(lt), gaps, p, beta)))
+    grad = jax.jit(jax.grad(lambda lt, beta: _soft_energy(jnp.exp(lt), gaps, p, beta, weights)))
     # Adam, scalar parameter
     m = v = 0.0
     for t in range(1, steps + 1):
@@ -214,19 +224,35 @@ def irregular_trace(p: AccelProfile, n: int = 4000, seed: int = 0,
     return np.where(pick, short, long_)
 
 
+def mmpp_gaps(rng: np.random.Generator, n: int, *, p_leave_busy: float,
+              p_enter_busy: float, fast_scale: float, slow_scale: float) -> np.ndarray:
+    """Markov-modulated gap sequence, fully vectorized through run lengths.
+
+    The two-state chain starts busy, leaves busy with ``p_leave_busy`` and
+    quiet with ``p_enter_busy`` after each emission, so busy/quiet run
+    lengths are Geometric(p_leave_busy)/Geometric(p_enter_busy) and
+    alternate; n runs of each always cover n emissions. Gap magnitudes are
+    exponential with the per-state scale, sampled in one vectorized draw
+    (identical distribution to a per-gap Python loop over the chain). Shared
+    by ``bursty_trace`` (duty-cycle gap traces) and
+    ``serving.load.bursty_stream`` (request arrival processes).
+    """
+    runs = np.empty(2 * n, np.int64)
+    runs[0::2] = rng.geometric(p_leave_busy, n)   # busy runs (chain starts busy)
+    runs[1::2] = rng.geometric(p_enter_busy, n)   # quiet runs
+    states = np.zeros(2 * n, bool)
+    states[0::2] = True
+    busy = np.repeat(states, runs)[:n]
+    return np.where(busy, rng.exponential(fast_scale, n),
+                    rng.exponential(slow_scale, n))
+
+
 def bursty_trace(p: AccelProfile, n: int = 4000, seed: int = 0) -> np.ndarray:
     """Markov-modulated: bursts of fast requests, then long quiets."""
-    rng = np.random.default_rng(seed)
     tau_be = break_even_tau(p)
-    gaps, busy = [], True
-    for _ in range(n):
-        if busy:
-            gaps.append(rng.exponential(0.2 * tau_be))
-            busy = rng.uniform() > 0.1
-        else:
-            gaps.append(rng.exponential(5 * tau_be))
-            busy = rng.uniform() < 0.7
-    return np.asarray(gaps)
+    return mmpp_gaps(np.random.default_rng(seed), n, p_leave_busy=0.1,
+                     p_enter_busy=0.7, fast_scale=0.2 * tau_be,
+                     slow_scale=5 * tau_be)
 
 
 def c4_improvement(p: AccelProfile, *, seed: int = 0) -> dict:

@@ -1,11 +1,17 @@
-"""Serving launcher: workload-aware duty-cycled inference (RQ2 on TPU).
+"""Serving launcher: continuous-batching scheduler with online duty cycling
+(RQ2 on TPU), plus the legacy offline strategy comparison.
 
-Runs the real InferenceEngine (reduced config on CPU) under a request trace
-and compares the paper's strategies — On-Off / Idle-Waiting / Slow-Down /
-adaptive — with TPU "configuration" constants (program + weight reload).
+Modes:
+  continuous  request-level scheduler: admission into free slots mid-decode,
+              one jitted masked decode step per tick, online streaming-τ
+              duty cycling between queue drains (the default)
+  compare     continuous vs the static-batch baseline on the same stream
+  strategies  the offline gap-trace strategy comparison (WorkloadAwareServer)
 
-Example:
-  python -m repro.launch.serve --arch granite-3-8b --trace bursty --n 200
+Examples:
+  python -m repro.launch.serve --arch granite-3-8b --load bursty --n 60
+  python -m repro.launch.serve --arch granite-3-8b --mode compare --load poisson
+  python -m repro.launch.serve --arch granite-3-8b --mode strategies --trace bursty
 """
 from __future__ import annotations
 
@@ -13,46 +19,104 @@ import argparse
 
 import numpy as np
 
-from repro.configs import get_config, get_reduced_config, list_archs
+from repro.configs import get_reduced_config, list_archs
 from repro.core.workload import bursty_trace, irregular_trace, regular_trace
 from repro.serving.engine import InferenceEngine, ServeConfig, WorkloadAwareServer
+from repro.serving.load import (
+    bursty_stream_for_service,
+    diurnal_stream,
+    mean_service_s,
+    poisson_stream,
+)
+from repro.serving.scheduler import (
+    ContinuousBatchingScheduler,
+    EngineCalibration,
+    run_static_batches,
+)
+
+
+def _make_stream(args, cfg, cal):
+    """Arrival rates scaled from the measured step costs so the stream
+    exercises both queue pressure and duty-cycle-relevant quiets."""
+    service = mean_service_s(cal)
+    kw = dict(seed=args.seed, vocab_size=cfg.vocab_size,
+              prompt_lens=(4, 8), new_tokens=(4, 24))
+    if args.load == "poisson":
+        return poisson_stream(args.n, rate_hz=0.5 / service, **kw)
+    if args.load == "diurnal":
+        return diurnal_stream(args.n, base_rate_hz=0.1 / service,
+                              peak_rate_hz=1.0 / service,
+                              period_s=40 * service, **kw)
+    return bursty_stream_for_service(cal, args.n, **kw)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--trace", default="regular", choices=("regular", "irregular", "bursty"))
-    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--mode", default="continuous",
+                    choices=("continuous", "compare", "strategies"))
+    ap.add_argument("--load", default="bursty",
+                    choices=("poisson", "bursty", "diurnal"))
+    ap.add_argument("--policy", default="adaptive",
+                    choices=("on_off", "idle_waiting", "slow_down", "adaptive"))
+    ap.add_argument("--trace", default="regular",
+                    choices=("regular", "irregular", "bursty"),
+                    help="gap trace for --mode strategies")
+    ap.add_argument("--n", type=int, default=60)
     ap.add_argument("--period", type=float, default=2.0, help="regular trace period (s)")
     ap.add_argument("--chips", type=int, default=1)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch)
-    engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=args.batch, max_len=64))
-    server = WorkloadAwareServer(engine, chips=args.chips)
-    t_inf = server.measure_latency(batch=args.batch, new_tokens=args.new_tokens)
-    prof = server.profile(t_inf)
-    print(f"{args.arch}: measured batch latency {t_inf * 1e3:.1f} ms, "
-          f"reload {prof.t_cfg_s:.2f}s/{prof.e_cfg_j:.0f}J")
+    engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=args.batch,
+                                                 max_len=args.max_len))
 
-    if args.trace == "regular":
-        gaps = regular_trace(args.period, t_inf, args.n)
-    elif args.trace == "irregular":
-        gaps = irregular_trace(prof, n=args.n, seed=args.seed)
-    else:
-        gaps = bursty_trace(prof, n=args.n, seed=args.seed)
+    if args.mode == "strategies":
+        server = WorkloadAwareServer(engine, chips=args.chips)
+        t_inf = server.measure_latency(batch=args.batch, new_tokens=args.new_tokens)
+        prof = server.profile(t_inf)
+        print(f"{args.arch}: measured batch latency {t_inf * 1e3:.1f} ms, "
+              f"reload {prof.t_cfg_s:.2f}s/{prof.e_cfg_j:.0f}J")
+        if args.trace == "regular":
+            gaps = regular_trace(args.period, t_inf, args.n)
+        elif args.trace == "irregular":
+            gaps = irregular_trace(prof, n=args.n, seed=args.seed)
+        else:
+            gaps = bursty_trace(prof, n=args.n, seed=args.seed)
+        results = server.compare_strategies(gaps, t_inf=t_inf, batch=args.batch,
+                                            new_tokens=args.new_tokens,
+                                            execute_every=max(args.n // 4, 1))
+        best = max(results, key=lambda k: results[k].items_per_joule)
+        for k, v in results.items():
+            star = " *" if k == best else ""
+            print(f"  {k:14s} items/J={v.items_per_joule:.5f} reloads={v.reloads} "
+                  f"missed={v.missed}{star}")
+        return 0
 
-    results = server.compare_strategies(gaps, batch=args.batch,
-                                        new_tokens=args.new_tokens,
-                                        execute_every=max(args.n // 4, 1))
-    best = max(results, key=lambda k: results[k].items_per_joule)
-    for k, v in results.items():
-        star = " *" if k == best else ""
-        print(f"  {k:14s} items/J={v.items_per_joule:.5f} reloads={v.reloads} "
-              f"missed={v.missed}{star}")
+    cal = EngineCalibration(engine)
+    reqs = _make_stream(args, cfg, cal)
+    print(f"{args.arch}: {args.load} stream, {args.n} requests, "
+          f"t_step={cal.step_s() * 1e3:.2f} ms, pool={args.batch}")
+    sched = ContinuousBatchingScheduler(engine, policy=args.policy,
+                                        chips=args.chips, calibration=cal)
+    rep = sched.run(reqs)
+    print("  " + rep.summary())
+    tau = sched.policy.tau
+    if tau is not None:
+        print(f"  online tau after run: {tau:.3f} s "
+              f"(refits: {getattr(sched.policy, 'refits', 0)})")
+    if args.mode == "compare":
+        stat = run_static_batches(engine, reqs, policy=args.policy,
+                                  chips=args.chips, calibration=cal,
+                                  flush_s=16 * mean_service_s(cal))
+        print("  " + stat.summary())
+        print(f"  continuous/static items-per-J: "
+              f"{rep.items_per_joule / stat.items_per_joule:.2f}x, "
+              f"p50 speedup: {stat.p50_s / rep.p50_s:.2f}x")
     return 0
 
 

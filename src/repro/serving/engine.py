@@ -32,6 +32,18 @@ from repro.core.workload import AccelProfile, break_even_tau, learn_tau, simulat
 from repro.models.model import decode_step, init_model, prefill
 from repro.models.params import init_params
 from repro.serving.kv_cache import cache_defs
+from repro.serving.slots import SlotPool, grow_cache
+
+
+def tpu_reload_costs(cfg: ArchConfig, chip: TPUChip = DEFAULT_CHIP, *,
+                     chips: int = 1, weight_bytes: float | None = None
+                     ) -> tuple[float, float]:
+    """(t_reload_s, e_reload_j) for the TPU "configuration" analogue:
+    program load + HBM weight refill after a power-off (DESIGN.md §2)."""
+    if weight_bytes is None:
+        weight_bytes = 2.0 * cfg.param_count() / max(chips, 1)
+    t_reload = chip.reload_time(weight_bytes)
+    return t_reload, t_reload * chip.p_idle_w * chips
 
 
 # ---------------------------------------------------------------------------
@@ -57,9 +69,14 @@ class InferenceEngine:
         self._prefill = jax.jit(
             lambda p, toks, fe: prefill(p, toks, cfg, frontend_embeds=fe)
         )
+        # the cache argument is donated: each decode step updates it in place
+        # instead of doubling cache memory per step (no-op where the backend
+        # lacks donation — the semantics are unchanged either way)
         self._decode = jax.jit(
-            lambda p, cache, tok, pos: decode_step(p, cache, tok, pos, cfg)
+            lambda p, cache, tok, pos: decode_step(p, cache, tok, pos, cfg),
+            donate_argnums=(1,),
         )
+        self._masked_decode = jax.jit(self._masked_decode_impl, donate_argnums=(1,))
         self._fresh_cache = jax.jit(
             lambda: init_params(
                 cache_defs(cfg, batch=self.sc.max_batch, max_len=self.sc.max_len),
@@ -96,28 +113,66 @@ class InferenceEngine:
 
     def _grow_cache(self, cache: dict, s0: int):
         """Pad prefill-produced seq-dim caches out to max_len capacity."""
-        cfg, cap = self.cfg, self.sc.max_len
+        return grow_cache(self.cfg, cache, self.sc.max_len)
 
-        def grow(x, axis):
-            pad = cap - x.shape[axis]
-            if pad <= 0:
-                return x
-            widths = [(0, 0)] * x.ndim
-            widths[axis] = (0, pad)
-            return jnp.pad(x, widths)
+    # -- continuous-batching execution path ---------------------------------
+    def make_pool(self) -> SlotPool:
+        return SlotPool(self.cfg, max_batch=self.sc.max_batch,
+                        max_len=self.sc.max_len)
 
-        f = cfg.family
-        if f in ("dense", "vlm", "audio") or (f == "moe" and cfg.mla is None):
-            cache = dict(cache, k=grow(cache["k"], 2), v=grow(cache["v"], 2))
-        elif f == "moe":
-            cache = dict(cache, c=grow(cache["c"], 2), krope=grow(cache["krope"], 2))
-        elif f == "hybrid":
-            cache = dict(
-                cache,
-                shared_k=grow(cache["shared_k"], 2),
-                shared_v=grow(cache["shared_v"], 2),
-            )
-        return cache  # ssm caches are O(1) — nothing to grow
+    def prefill_into_slot(self, pool: SlotPool, slot: int, prompt: np.ndarray,
+                          *, rid: int, budget: int) -> int:
+        """Prefill one request (batch 1) and admit it into ``slot``.
+
+        Returns the request's first emitted token (greedy argmax of the
+        prefill logits). The jitted prefill retraces per distinct prompt
+        length — arrival generators keep prompt lengths in a small bucket
+        set for exactly that reason.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        (s0,) = prompt.shape
+        if s0 + budget > self.sc.max_len:
+            raise ValueError(f"prompt {s0} + budget {budget} exceeds "
+                             f"max_len {self.sc.max_len}")
+        logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None],
+                                      self._frontend_stub(1))
+        cache = grow_cache(self.cfg, cache, self.sc.max_len)
+        first = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
+        pool.admit(slot, cache, rid=rid, pos=s0, budget=budget, first_tok=first)
+        return first
+
+    def masked_decode_step(self, pool: SlotPool) -> np.ndarray:
+        """One decode step over the whole pool. Returns next greedy token per
+        slot, (max_batch,) int32 — entries for inactive slots are garbage.
+
+        Host-side slot bookkeeping (pos/emitted advancement, retirement) is
+        the scheduler's job; this only advances the device state.
+        """
+        nxt, pool.cache = self._masked_decode(
+            self.params, pool.cache, jnp.asarray(pool.tok),
+            jnp.asarray(pool.positions()), jnp.asarray(pool.active),
+        )
+        return np.asarray(nxt)
+
+    def _masked_decode_impl(self, params, cache, tok, pos, active):
+        """vmapped per-slot decode: every slot steps at its OWN position.
+
+        Inactive slots are clamped to position 0 — their writes land in dead
+        cache rows that the next admit overwrites wholesale. vmap over the
+        batch axis (axis 1 on every cache leaf) reuses the per-family
+        ``decode_step`` bodies unchanged, so all ten architecture families
+        get the masked path for free.
+        """
+        cfg = self.cfg
+        pos = jnp.where(active, pos, 0)
+
+        def one(cache_b, tok_b, pos_b):
+            c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1), cache_b)
+            logits, c1 = decode_step(params, c1, tok_b[None, None], pos_b, cfg)
+            nxt = jnp.argmax(logits[0, : cfg.vocab_size]).astype(jnp.int32)
+            return nxt, jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
+
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(cache, tok, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -159,10 +214,9 @@ class WorkloadAwareServer:
         self.strategy = strategy
         self.chip = chip
         self.chips = chips
-        if weight_bytes is None:
-            weight_bytes = 2.0 * engine.cfg.param_count() / max(chips, 1)
-        self.t_reload = chip.reload_time(weight_bytes)
-        self.e_reload = self.t_reload * chip.p_idle_w * chips
+        self.t_reload, self.e_reload = tpu_reload_costs(
+            engine.cfg, chip, chips=chips, weight_bytes=weight_bytes
+        )
         self.tau = tau
         self._measured_t: float | None = None
 
@@ -193,43 +247,57 @@ class WorkloadAwareServer:
         new_tokens: int = 8,
         learn: bool = False,
         execute_every: int = 0,
+        t_inf: float | None = None,
     ) -> ServerStats:
         """Serve one request batch per trace entry; ``gaps[i]`` is the idle
         time after batch i. ``execute_every=k`` really runs the engine every
         k-th batch (0 = once up front) — the rest reuse the measured latency
-        (keeps CPU test time sane while the energy ledger stays faithful)."""
-        t_inf = self._measured_t or self.measure_latency(batch, prompt_len, new_tokens)
+        (keeps CPU test time sane while the energy ledger stays faithful).
+        ``t_inf`` overrides the measured batch latency (no engine run)."""
+        if t_inf is None:
+            t_inf = self._measured_t or self.measure_latency(batch, prompt_len, new_tokens)
         prof = self.profile(t_inf)
         tau = self.tau
         if self.strategy == "adaptive" and tau is None:
             tau = learn_tau(gaps, prof) if learn else break_even_tau(prof)
 
-        stats = ServerStats()
-        prompts = np.zeros((batch, prompt_len), np.int32)
-        for i, g in enumerate(np.asarray(gaps, float)):
-            if execute_every and i % execute_every == 0:
+        g = np.asarray(gaps, float).ravel()
+        if execute_every:
+            prompts = np.zeros((batch, prompt_len), np.int32)
+            for _ in range(-(-g.size // execute_every)):
                 self.engine.generate(prompts, new_tokens)
-            res = simulate(np.asarray([g]), self.strategy, prof, tau=tau)
-            stats.items += 1
-            # simulate() charges e_cfg once up front per call; amortize it out
-            stats.energy_j += res.energy_j - prof.e_cfg_j
-            stats.missed += res.missed_deadlines
-            stats.busy_s += t_inf
-            stats.idle_s += g
-            if self.strategy == "on_off" or (
-                self.strategy == "adaptive" and g > (tau or 0.0)
-            ):
-                stats.reloads += 1
-        stats.energy_j += prof.e_cfg_j  # the one true initial configuration
-        return stats
 
-    def compare_strategies(self, gaps: np.ndarray, **kw) -> dict[str, ServerStats]:
+        # the whole energy ledger in ONE vectorized simulate call: simulate
+        # already charges the single initial configuration plus per-gap energy
+        res = simulate(g, self.strategy, prof, tau=tau)
+        if self.strategy == "on_off":
+            reloads = g.size
+        elif self.strategy == "adaptive":
+            reloads = int(np.count_nonzero(g > (tau or 0.0)))
+        else:
+            reloads = 0
+        return ServerStats(
+            items=res.items,
+            energy_j=res.energy_j,
+            busy_s=res.items * t_inf,
+            idle_s=float(g.sum()),
+            reloads=reloads,
+            missed=res.missed_deadlines,
+        )
+
+    def compare_strategies(self, gaps: np.ndarray, *, t_inf: float | None = None,
+                           **kw) -> dict[str, ServerStats]:
+        """Run every strategy over ``gaps`` at one shared measured latency.
+
+        The latency is passed to each per-strategy server explicitly —
+        no private-attribute side channel, and ``self`` is left untouched
+        when ``t_inf`` is supplied."""
+        if t_inf is None:
+            t_inf = self._measured_t or self.measure_latency()
         out = {}
         for strat in ("on_off", "idle_waiting", "slow_down", "adaptive"):
             srv = WorkloadAwareServer(
                 self.engine, strategy=strat, chip=self.chip, chips=self.chips
             )
-            srv._measured_t = self._measured_t or self.measure_latency()
-            self._measured_t = srv._measured_t
-            out[strat] = srv.run_trace(gaps, **kw)
+            out[strat] = srv.run_trace(gaps, t_inf=t_inf, **kw)
         return out

@@ -1,0 +1,133 @@
+"""Arrival-process generators: timestamped request streams for the serving
+scheduler.
+
+Three processes, all vectorized:
+
+  poisson_stream   homogeneous Poisson arrivals (i.i.d. exponential gaps)
+  bursty_stream    Markov-modulated Poisson: bursts of fast arrivals, then
+                   long quiets (geometric run lengths, the same construction
+                   as ``core.workload.bursty_trace``)
+  diurnal_stream   rate-varying Poisson (sinusoidal "day/night" intensity)
+                   via Lewis–Shedler thinning
+
+Per-request prompt lengths are drawn from a small bucket set — the engine's
+jitted prefill retraces per distinct prompt length, so a bounded set keeps
+the compile count bounded. Output-token budgets are uniform over a range.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.workload import mmpp_gaps
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: arrival timestamp + prompt + decode budget."""
+
+    rid: int
+    arrival_s: float
+    prompt: np.ndarray          # (s0,) int32 token ids
+    new_tokens: int             # total tokens to emit (>= 1)
+    deadline_s: float | None = None  # max latency before counting as missed
+
+
+def _materialize(arrivals: np.ndarray, *, seed: int, vocab_size: int,
+                 prompt_lens: tuple[int, ...], new_tokens: tuple[int, int],
+                 deadline_s: float | None) -> list[Request]:
+    rng = np.random.default_rng(seed + 1)
+    n = arrivals.size
+    lens = rng.choice(np.asarray(prompt_lens), size=n)
+    budgets = rng.integers(new_tokens[0], new_tokens[1] + 1, size=n)
+    return [
+        Request(
+            rid=i,
+            arrival_s=float(arrivals[i]),
+            prompt=rng.integers(0, vocab_size, lens[i]).astype(np.int32),
+            new_tokens=int(budgets[i]),
+            deadline_s=deadline_s,
+        )
+        for i in range(n)
+    ]
+
+
+def poisson_stream(n: int, *, rate_hz: float, seed: int = 0,
+                   vocab_size: int = 256, prompt_lens: tuple[int, ...] = (4, 8, 16),
+                   new_tokens: tuple[int, int] = (4, 16),
+                   deadline_s: float | None = None) -> list[Request]:
+    """Homogeneous Poisson arrivals at ``rate_hz`` requests/second."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
+    return _materialize(arrivals, seed=seed, vocab_size=vocab_size,
+                        prompt_lens=prompt_lens, new_tokens=new_tokens,
+                        deadline_s=deadline_s)
+
+
+def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
+                  p_leave_burst: float = 0.1, p_enter_burst: float = 0.7,
+                  seed: int = 0, vocab_size: int = 256,
+                  prompt_lens: tuple[int, ...] = (4, 8, 16),
+                  new_tokens: tuple[int, int] = (4, 16),
+                  deadline_s: float | None = None) -> list[Request]:
+    """Markov-modulated arrivals: geometric bursts at ``fast_rate_hz``
+    separated by geometric quiets at ``slow_rate_hz`` (starts in a burst)."""
+    gaps = mmpp_gaps(np.random.default_rng(seed), n, p_leave_busy=p_leave_burst,
+                     p_enter_busy=p_enter_burst, fast_scale=1.0 / fast_rate_hz,
+                     slow_scale=1.0 / slow_rate_hz)
+    return _materialize(np.cumsum(gaps), seed=seed, vocab_size=vocab_size,
+                        prompt_lens=prompt_lens, new_tokens=new_tokens,
+                        deadline_s=deadline_s)
+
+
+def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
+                              prompt_lens: tuple[int, ...] = (4, 8),
+                              new_tokens: tuple[int, int] = (8, 32),
+                              burst_factor: float = 3.0,
+                              quiet_factor: float = 0.02) -> list[Request]:
+    """Bursty stream with rates scaled from a calibration's measured costs:
+    sustained bursts (mean ~20 requests) at ``burst_factor``× the mean
+    service rate — genuine queue pressure, the regime continuous batching
+    exists for — separated by quiets at ``quiet_factor``×
+    (duty-cycle-relevant idle). The ONE regime definition shared by the
+    serve benchmark, the launcher's compare mode, and the example."""
+    service = mean_service_s(cal, prompt_len=max(prompt_lens),
+                             mean_tokens=(new_tokens[0] + new_tokens[1]) // 2)
+    return bursty_stream(n, fast_rate_hz=burst_factor / service,
+                         slow_rate_hz=quiet_factor / service,
+                         p_leave_burst=0.05, seed=seed,
+                         vocab_size=vocab_size, prompt_lens=prompt_lens,
+                         new_tokens=new_tokens)
+
+
+def mean_service_s(cal, *, prompt_len: int = 8, mean_tokens: int = 12) -> float:
+    """Rough mean per-request service time from measured step costs
+    (``cal`` is any calibration exposing prefill_s/step_s)."""
+    return cal.prefill_s(1, prompt_len) + mean_tokens * cal.step_s()
+
+
+def diurnal_stream(n: int, *, base_rate_hz: float, peak_rate_hz: float,
+                   period_s: float, seed: int = 0, vocab_size: int = 256,
+                   prompt_lens: tuple[int, ...] = (4, 8, 16),
+                   new_tokens: tuple[int, int] = (4, 16),
+                   deadline_s: float | None = None) -> list[Request]:
+    """Rate-varying Poisson, λ(t) = base + (peak-base)·(1+sin(2πt/T))/2,
+    sampled by Lewis–Shedler thinning against the peak rate."""
+    assert peak_rate_hz >= base_rate_hz > 0
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0.0
+    while len(arrivals) < n:
+        # batched candidate generation at the peak rate, then thin
+        cand = t + np.cumsum(rng.exponential(1.0 / peak_rate_hz, 4 * n))
+        lam = base_rate_hz + (peak_rate_hz - base_rate_hz) * (
+            1.0 + np.sin(2.0 * np.pi * cand / period_s)
+        ) / 2.0
+        keep = cand[rng.uniform(size=cand.size) < lam / peak_rate_hz]
+        arrivals.extend(keep.tolist())
+        t = cand[-1]
+    arrivals = np.asarray(arrivals[:n])
+    return _materialize(arrivals, seed=seed, vocab_size=vocab_size,
+                        prompt_lens=prompt_lens, new_tokens=new_tokens,
+                        deadline_s=deadline_s)

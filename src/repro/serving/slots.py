@@ -1,0 +1,135 @@
+"""Slot-pool decode state for continuous batching.
+
+The family-appropriate cache from ``kv_cache.cache_defs`` becomes a fixed
+pool of ``max_batch`` slots sharing ONE device cache pytree (batch axis 1 on
+every leaf, by construction). Requests of different prompt lengths and token
+budgets are admitted into free slots mid-decode and retired independently,
+so the engine runs a single jitted masked decode step over the whole pool
+instead of lockstep fixed batches:
+
+  * ``active`` / per-slot ``pos`` are host-side scheduler state; the device
+    only ever sees the full (max_batch,) vectors, so the decode step has one
+    compile signature for the lifetime of the pool.
+  * ``admit`` writes a prefill-produced per-request cache (grown to pool
+    capacity with ``grow_cache``) into the slot's batch row with a jitted
+    donated ``dynamic_update_slice`` — the slot index is a traced scalar, so
+    all slots share one compile.
+  * ``retire`` only flips host-side bookkeeping: a freed slot's cache rows
+    are dead data, fully overwritten by the next ``admit``. (The masked
+    decode step clamps inactive slots to position 0, so their scribbles land
+    in dead rows too.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.params import init_params
+from repro.serving.kv_cache import cache_defs
+
+
+def grow_cache(cfg: ArchConfig, cache: dict, max_len: int) -> dict:
+    """Pad prefill-produced seq-dim caches out to ``max_len`` capacity.
+
+    SSM conv/state caches are O(1) in sequence — nothing to grow; the
+    hybrid family grows only its shared-attention K/V, audio only its
+    decoder self-attention K/V (cross K/V is fixed at encoder_seq).
+    """
+
+    def grow(x, axis):
+        pad = max_len - x.shape[axis]
+        if pad <= 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    f = cfg.family
+    if f in ("dense", "vlm", "audio") or (f == "moe" and cfg.mla is None):
+        cache = dict(cache, k=grow(cache["k"], 2), v=grow(cache["v"], 2))
+    elif f == "moe":
+        cache = dict(cache, c=grow(cache["c"], 2), krope=grow(cache["krope"], 2))
+    elif f == "hybrid":
+        cache = dict(
+            cache,
+            shared_k=grow(cache["shared_k"], 2),
+            shared_v=grow(cache["shared_v"], 2),
+        )
+    return cache  # ssm caches are O(1) — nothing to grow
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    """Host-side bookkeeping for one slot."""
+
+    rid: int | None = None
+    pos: int = 0      # next cache position to write (== tokens resident)
+    budget: int = 0   # total new tokens this request will emit
+    emitted: int = 0  # tokens emitted so far (prefill's argmax counts as #1)
+
+
+class SlotPool:
+    """Fixed pool of decode slots over one shared device cache."""
+
+    def __init__(self, cfg: ArchConfig, *, max_batch: int, max_len: int,
+                 virtual: bool = False):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        # virtual pools carry only the host-side bookkeeping (scheduler
+        # studies with FixedCalibration — no device cache, no engine)
+        self.cache = None if virtual else init_params(
+            cache_defs(cfg, batch=max_batch, max_len=max_len), jax.random.PRNGKey(0)
+        )
+        self.slots = [SlotInfo() for _ in range(max_batch)]
+        self.active = np.zeros(max_batch, bool)
+        self.tok = np.zeros(max_batch, np.int32)  # next decode input per slot
+        self._write = jax.jit(self._write_impl, donate_argnums=(0,))
+
+    @staticmethod
+    def _write_impl(pool_cache, req_cache, slot):
+        return jax.tree.map(
+            lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+                p, r.astype(p.dtype), slot, axis=1
+            ),
+            pool_cache,
+            req_cache,
+        )
+
+    # -- host-side views ----------------------------------------------------
+    @property
+    def active_count(self) -> int:
+        return int(self.active.sum())
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.max_batch) if not self.active[i]]
+
+    def active_slots(self) -> list[int]:
+        return [i for i in range(self.max_batch) if self.active[i]]
+
+    def positions(self) -> np.ndarray:
+        return np.asarray([s.pos for s in self.slots], np.int32)
+
+    # -- lifecycle ----------------------------------------------------------
+    def admit(self, slot: int, req_cache: dict, *, rid: int, pos: int,
+              budget: int, first_tok: int) -> None:
+        """Place a prefilled request (cache already grown to max_len) into a
+        free slot. ``pos`` is the prompt length; ``first_tok`` the argmax of
+        the prefill logits (the request's first emitted token)."""
+        assert self.cache is not None, "cannot admit a real cache into a virtual pool"
+        assert not self.active[slot], f"slot {slot} already active"
+        assert pos + budget <= self.max_len, (pos, budget, self.max_len)
+        assert budget >= 1
+        self.cache = self._write(self.cache, req_cache, jnp.int32(slot))
+        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
+        self.active[slot] = True
+        self.tok[slot] = first_tok
+
+    def retire(self, slot: int) -> None:
+        assert self.active[slot], f"slot {slot} not active"
+        self.active[slot] = False
+        self.slots[slot] = SlotInfo()
