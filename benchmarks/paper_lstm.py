@@ -10,8 +10,68 @@ timesteps, one batched input-projection matmul) timed against the per-step
 ``pallas_call``+``jax.lax.scan`` baseline, both in the same execution mode
 with interleaved sampling and median-of-N per-call wall time.  Block sizes
 come from the ``repro.kernels.autotune`` roofline tuner (``block_b="auto"``).
+
+Two follow-on comparisons extend the kernel table (the paper's precision ×
+residency pairing):
+
+  * int8-resident vs f32 ``lstm_seq`` at equal (B, S, D, H) — the quantized
+    weights shrink the resident footprint 4×, the dtype-aware tuner widens
+    ``block_b`` (less padding, fewer grid steps, fewer weight streams);
+  * the layer-fused L-layer stack (one ``pallas_call``, inter-layer h in
+    VMEM scratch) vs L sequential ``lstm_seq`` calls.
+
+``--quick`` (or ``run(quick=True)``) shrinks every shape and the sample
+count for the CI ``lstm-bench-smoke`` step.  Under
+``REPRO_AUTOTUNE_MEASURE=1`` the driver (``benchmarks/run.py``) first
+refines the analytic top-3 block candidates for every sequence-resident
+shape in :func:`bench_shapes` with empirical timing
+(``bench.make_measure_fn``); the ``pallas_step`` baseline side keeps its
+analytic ``lstm_cell`` winners.
 """
 import dataclasses
+
+# (batch, seq, d_in, hidden) for the f32-vs-int8 comparison: sized so the
+# f32 weight residency (2.1 MB) pushes the f32 tuner down to block_b=32
+# (padding 40 → 64) while int8 (0.54 MB) affords the whole batch in one
+# block_b=40 tile — the footprint→geometry mechanism under test.
+QUANT_SHAPE = (40, 28, 256, 256)
+# Same (B, S, D, H) with L=3 for the stack comparison: the fused stack's
+# JOINT tile choice (all L layers' weights resident at once) lands on a
+# padding-free block_b=8 tile, while each sequential lstm_seq call tunes to
+# block_b=32 and pads 40 → 64 rows — per-layer geometry compounds L times.
+STACK_SHAPE = (40, 28, 256, 256, 3)   # (batch, seq, d_in, hidden, layers)
+PAPER_BATCH = 64
+SCALED_SHAPE = (32, 64, 16, 32)
+
+QUICK_QUANT_SHAPE = (16, 8, 64, 64)
+QUICK_STACK_SHAPE = (8, 8, 16, 16, 2)
+QUICK_SCALED_SHAPE = (8, 16, 8, 16)
+QUICK_N = 7
+
+
+def bench_shapes(quick: bool = False):
+    """(kernel, problem, dtype) triples this benchmark will execute — the
+    driver refines these via the autotuner's empirical measure_fn when
+    ``REPRO_AUTOTUNE_MEASURE=1``."""
+    from repro.core.fpga import paper_workload
+
+    lw = paper_workload()
+    qb, qs, qd, qh = QUICK_QUANT_SHAPE if quick else QUANT_SHAPE
+    sb, ss, sd, sh, sl = QUICK_STACK_SHAPE if quick else STACK_SHAPE
+    cb, cs, cd, ch = QUICK_SCALED_SHAPE if quick else SCALED_SHAPE
+    pb = 8 if quick else PAPER_BATCH
+    return [
+        ("lstm_seq", {"batch": pb, "seq": lw.seq, "d_in": lw.d_in,
+                      "hidden": lw.hidden}, "float32"),
+        ("lstm_seq", {"batch": cb, "seq": cs, "d_in": cd, "hidden": ch},
+         "float32"),
+        ("lstm_seq", {"batch": qb, "seq": qs, "d_in": qd, "hidden": qh},
+         "float32"),
+        ("lstm_seq", {"batch": qb, "seq": qs, "d_in": qd, "hidden": qh},
+         "int8"),
+        ("lstm_stack", {"batch": sb, "seq": ss, "d_in": sd, "hidden": sh,
+                        "layers": sl}, "float32"),
+    ]
 
 from repro.core.candidates import DesignPoint
 from repro.core.constraints import scenario_continuous_throughput
@@ -66,7 +126,7 @@ def tpu_kernel_compare(batch: int, seq: int, d_in: int, hidden: int,
     return compare_lstm_paths(batch, seq, d_in, hidden, n=n, impl=impl)
 
 
-def run() -> dict:
+def run(quick: bool = False) -> dict:
     w = paper_workload()
     base, opt = baseline_template(), optimized_template()
     table = rows()
@@ -86,17 +146,37 @@ def run() -> dict:
               f"{(v / PUBLISHED[k] - 1) * 100:+.2f}%)")
 
     # -- TPU kernel mapping: sequence residency vs per-step relaunch ---------
+    from repro.kernels.bench import compare_lstm_quant, compare_lstm_stack
+
     lw = paper_workload()
+    n = QUICK_N if quick else 33
     print("\nTPU Pallas mapping (median per-call µs, interleaved samples):")
     print(f"{'shape':34s} {'seq-resident':>12s} {'per-step scan':>13s} {'speedup':>8s}")
-    paper_shape = (64, lw.seq, lw.d_in, lw.hidden)
-    scaled_shape = (32, 64, 16, 32)
-    seq_us_p, step_us_p = tpu_kernel_compare(*paper_shape)
-    seq_us, step_us = tpu_kernel_compare(*scaled_shape)
+    paper_shape = ((8 if quick else PAPER_BATCH), lw.seq, lw.d_in, lw.hidden)
+    scaled_shape = QUICK_SCALED_SHAPE if quick else SCALED_SHAPE
+    seq_us_p, step_us_p = tpu_kernel_compare(*paper_shape, n=n)
+    seq_us, step_us = tpu_kernel_compare(*scaled_shape, n=n)
     for shape, (a, b) in [(paper_shape, (seq_us_p, step_us_p)),
                           (scaled_shape, (seq_us, step_us))]:
         name = "B=%d S=%d D=%d H=%d" % shape
         print(f"{name:34s} {a:12.0f} {b:13.0f} {b / a:7.2f}x")
+
+    # -- precision × residency: int8-resident vs f32 at equal shapes ---------
+    quant_shape = QUICK_QUANT_SHAPE if quick else QUANT_SHAPE
+    f32_us, q8_us = compare_lstm_quant(*quant_shape, n=n)
+    name = "B=%d S=%d D=%d H=%d" % quant_shape
+    print(f"\nint8-resident vs f32 seq-resident (equal shapes):")
+    print(f"{name:34s} {'f32':>8s} {f32_us:8.0f}  {'int8':>6s} {q8_us:8.0f}  "
+          f"{f32_us / q8_us:6.2f}x")
+
+    # -- layer-fused stack vs L sequential lstm_seq calls --------------------
+    stack_shape = QUICK_STACK_SHAPE if quick else STACK_SHAPE
+    stack_us, lseq_us = compare_lstm_stack(*stack_shape, n=n)
+    name = "B=%d S=%d D=%d H=%d L=%d" % stack_shape
+    print(f"\nlayer-fused stack vs {stack_shape[4]} sequential lstm_seq calls:")
+    print(f"{name:34s} {'fused':>8s} {stack_us:8.0f}  {'seq':>6s} {lseq_us:8.0f}  "
+          f"{lseq_us / stack_us:6.2f}x")
+
     return {
         "C1_latency_reduction_pct": 100 * (1 - got["opt_us"] / got["base_us"]),
         "C2_ee_ratio": got["opt_ee"] / got["base_ee"],
@@ -107,8 +187,19 @@ def run() -> dict:
         "tpu_seq_us_paper_shape": seq_us_p,
         "tpu_step_us_paper_shape": step_us_p,
         "tpu_seq_speedup_paper_shape": step_us_p / seq_us_p,
+        "tpu_f32_us_quant_shape": f32_us,
+        "tpu_q8_us_quant_shape": q8_us,
+        "tpu_q8_speedup": f32_us / q8_us,
+        "tpu_stack_us": stack_us,
+        "tpu_stack_sequential_us": lseq_us,
+        "tpu_stack_speedup": lseq_us / stack_us,
     }
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes + fewer samples (CI smoke)")
+    run(quick=ap.parse_args().quick)

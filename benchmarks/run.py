@@ -7,28 +7,83 @@ writes a ``BENCH_<timestamp>.json`` artifact (name, median_us, derived
 metrics per table) so the perf trajectory stays machine-readable across PRs:
 compare any two artifacts field-by-field to see what moved.
 
+When ``REPRO_AUTOTUNE_MEASURE=1``, the LSTM block-size winners are refined
+EMPIRICALLY before any bench runs: the autotuner's analytic top-3
+candidates for every shape ``benchmarks/paper_lstm.bench_shapes`` will
+execute are re-ranked by real kernel timing (``bench.make_measure_fn``) and
+the measured winner is cached — step 3 of the paper's Generator methodology
+(analytical pruning, then measurement of survivors), previously an unused
+hook.  The CI ``lstm-bench-smoke`` step exercises this in interpret mode.
+
 Usage:
   python benchmarks/run.py [--warmup 1] [--repeats 3] [--only NAME ...]
-                           [--out DIR]
+                           [--out DIR] [--quick]
 """
 import argparse
+import inspect
 import json
+import os
 import statistics
+import sys
 import time
 from datetime import datetime, timezone
 from pathlib import Path
 
+# Make ``from benchmarks import ...`` work when invoked as a script
+# (``python benchmarks/run.py`` puts benchmarks/ itself on sys.path, not
+# the repo root).
+_ROOT = str(Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
-def time_module(mod, warmup: int, repeats: int):
+
+def _run(mod, quick: bool):
+    """Call ``mod.run()``, forwarding ``quick`` when the bench supports it."""
+    if quick and "quick" in inspect.signature(mod.run).parameters:
+        return mod.run(quick=True)
+    return mod.run()
+
+
+def time_module(mod, warmup: int, repeats: int, quick: bool = False):
     """Median wall-time (µs) of ``mod.run()`` plus its derived metrics."""
     for _ in range(warmup):
-        mod.run()
+        _run(mod, quick)
     times, derived = [], {}
     for _ in range(max(repeats, 1)):
         t0 = time.perf_counter()
-        derived = mod.run() or {}
+        derived = _run(mod, quick) or {}
         times.append((time.perf_counter() - t0) * 1e6)
     return statistics.median(times), derived
+
+
+def autotune_measure_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE_MEASURE", "").strip().lower() in (
+        "1", "true", "yes", "on",
+    )
+
+
+def refine_lstm_autotune(quick: bool = False, *, top_k: int = 3) -> list[dict]:
+    """Empirically re-rank the analytic top-k block candidates for every
+    LSTM shape the benchmarks will run (the autotuner's ``measure_fn``
+    hook).  Winners land in the shared autotune cache, so the subsequent
+    ``block_b="auto"`` bench calls pick them up.  Returns the refined
+    entries for logging/tests."""
+    from benchmarks.paper_lstm import bench_shapes
+    from repro.kernels.autotune import autotune
+    from repro.kernels.bench import make_measure_fn
+
+    refined = []
+    for kernel, problem, dtype in bench_shapes(quick):
+        best = autotune(
+            kernel, problem, dtype=dtype,
+            measure_fn=make_measure_fn(kernel, problem, dtype=dtype),
+            top_k=top_k,
+        )
+        shape = ",".join(f"{k}={v}" for k, v in sorted(problem.items()))
+        print(f"  measured {kernel}[{dtype}] {shape} -> {best}")
+        refined.append({"kernel": kernel, "problem": dict(problem),
+                        "dtype": dtype, "best": dict(best)})
+    return refined
 
 
 def main(argv=None) -> None:
@@ -37,6 +92,8 @@ def main(argv=None) -> None:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--only", nargs="*", help="run only benches whose name contains any of these")
     ap.add_argument("--out", default=".", help="directory for the BENCH_*.json artifact")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / short streams for benches that support it")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -65,10 +122,17 @@ def main(argv=None) -> None:
         if not benches:
             ap.error(f"--only {args.only} matches no benchmark")
 
+    # Refinement only pays off when the LSTM bench actually runs (its
+    # winners are what the measured candidates feed).
+    if autotune_measure_enabled() and any(m is paper_lstm for _, m in benches):
+        print("REPRO_AUTOTUNE_MEASURE=1: refining LSTM block winners empirically")
+        refine_lstm_autotune(args.quick)
+
     results = []
     for name, mod in benches:
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
-        median_us, derived = time_module(mod, args.warmup, args.repeats)
+        median_us, derived = time_module(mod, args.warmup, args.repeats,
+                                         quick=args.quick)
         results.append({
             "name": name,
             "median_us": median_us,
@@ -81,7 +145,9 @@ def main(argv=None) -> None:
         print(f"{r['name']},{r['median_us']:.0f},{headline[0]}={headline[1]:.4g}")
 
     stamp = datetime.now(timezone.utc).strftime("%Y%m%d-%H%M%S")
-    artifact = Path(args.out) / f"BENCH_{stamp}.json"
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    artifact = out_dir / f"BENCH_{stamp}.json"
     artifact.write_text(json.dumps({
         "timestamp_utc": stamp,
         "warmup": args.warmup,

@@ -30,6 +30,49 @@ from repro.models.activations import VARIANT_COST, VARIANT_ERROR
 
 BF16 = 2  # bytes
 F32 = 4
+INT8 = 1
+
+# Bytes per element for the dtype strings that flow through the kernel layer
+# (autotune cache keys use ``str(x.dtype)``; quantized paths use "int8").
+DTYPE_BYTES = {
+    "float64": 8,
+    "float32": F32,
+    "float16": 2,
+    "bfloat16": BF16,
+    "int8": INT8,
+    "int32": 4,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Bytes/element for a dtype string; substrings accepted ("int8" in
+    "lstm-int8"). Unknown dtypes conservatively cost f32."""
+    if dtype in DTYPE_BYTES:
+        return DTYPE_BYTES[dtype]
+    for name, nbytes in DTYPE_BYTES.items():
+        if name in dtype:
+            return nbytes
+    return F32
+
+
+def chip_for_dtype(chip: "TPUChip", dtype: str) -> "TPUChip":
+    """Chip whose peak matches the matmul dtype: the MXU runs int8 at its
+    own (2×) peak, so int8 kernels are scored against ``peak_int8_ops``."""
+    if "int8" in dtype:
+        return dataclasses.replace(chip, peak_flops=chip.peak_int8_ops)
+    return chip
+
+
+def arithmetic_intensity(flops: float, hbm_bytes: float) -> float:
+    """Ops per HBM byte — the roofline x-axis. Quantizing resident weights
+    to int8 raises a memory-bound kernel's intensity (same ops, fewer
+    bytes), which is exactly the paper's precision×residency lever."""
+    return flops / hbm_bytes if hbm_bytes else float("inf")
+
+
+def ridge_intensity(chip: "TPUChip" = DEFAULT_CHIP, *, dtype: str = "bfloat16") -> float:
+    """Intensity at which compute and memory terms tie (ops/byte)."""
+    return chip_for_dtype(chip, dtype).peak_flops / chip.hbm_bw
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,15 @@ Supported kernels and their problem dicts:
   flash_attention {b, h, sq, sk, d}         → block_q, block_k
   lstm_cell       {batch, d_in, hidden}     → block_b
   lstm_seq        {batch, seq, d_in, hidden} → block_b
+  lstm_stack      {batch, seq, d_in, hidden, layers} → block_b
+
+The LSTM analytical models are DTYPE-AWARE: the resident/streamed weight
+bytes follow the weight dtype (``core.cost_model.dtype_bytes``), so an
+int8-quantized ``lstm_seq``/``lstm_stack`` (dtype="int8") has a 4× smaller
+weight footprint than f32 and the feasibility check admits WIDER ``block_b``
+batch tiles at the same VMEM budget — the precision×residency pairing the
+paper identifies, expressed as launch geometry.  Activations/carries stay
+f32 in the model (the quantized kernels do not quantize activations).
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ import tempfile
 import threading
 from typing import Callable, Mapping
 
-from repro.core.cost_model import Roofline
+from repro.core.cost_model import Roofline, chip_for_dtype, dtype_bytes
 from repro.core.energy import DEFAULT_CHIP, TPUChip
 from repro.kernels.runtime import backend_key
 
@@ -90,7 +99,8 @@ def _int8_matmul_candidates(p: Mapping[str, int]) -> list[dict]:
     ]
 
 
-def _int8_matmul_analyze(p: Mapping[str, int], c: Mapping[str, int]) -> _Analysis:
+def _int8_matmul_analyze(p: Mapping[str, int], c: Mapping[str, int],
+                         dtype: str = "int8") -> _Analysis:
     m, k, n = p["m"], p["k"], p["n"]
     bm, bn, bk = c["block_m"], c["block_n"], c["block_k"]
     # x block re-streamed once per N tile; w block once per M tile; the
@@ -119,7 +129,8 @@ def _flash_candidates(p: Mapping[str, int]) -> list[dict]:
     ]
 
 
-def _flash_analyze(p: Mapping[str, int], c: Mapping[str, int]) -> _Analysis:
+def _flash_analyze(p: Mapping[str, int], c: Mapping[str, int],
+                   dtype: str = "float32") -> _Analysis:
     b, h, sq, sk, d = p["b"], p["h"], p["sq"], p["sk"], p["d"]
     bq, bk = c["block_q"], c["block_k"]
     # q tile resident across the KV loop; k/v re-streamed once per q tile.
@@ -137,9 +148,25 @@ def _flash_analyze(p: Mapping[str, int], c: Mapping[str, int]) -> _Analysis:
     )
 
 
-def _lstm_weight_bytes(p: Mapping[str, int]) -> float:
-    d, hid = p["d_in"], p["hidden"]
-    return (d + hid + 1) * 4 * hid * F32
+def _lstm_weight_bytes(p: Mapping[str, int], dtype: str = "float32",
+                       d_in: int | None = None) -> float:
+    """One layer's w+u+bias bytes at the WEIGHT dtype.  int8 additionally
+    carries two 4H f32 per-gate-column scale vectors (lstm_quant)."""
+    d = p["d_in"] if d_in is None else d_in
+    hid = p["hidden"]
+    wb = dtype_bytes(dtype)
+    payload = (d + hid) * 4 * hid * wb
+    bias = 4 * hid * F32
+    scales = 2 * 4 * hid * F32 if "int8" in dtype else 0
+    return float(payload + bias + scales)
+
+
+def _lstm_stack_weight_bytes(p: Mapping[str, int], dtype: str) -> float:
+    """All L layers: layer 0 projects from d_in, layers 1.. from hidden."""
+    layers = p["layers"]
+    first = _lstm_weight_bytes(p, dtype)
+    rest = _lstm_weight_bytes(p, dtype, d_in=p["hidden"])
+    return first + (layers - 1) * rest
 
 
 def _lstm_blocks(p: Mapping[str, int]) -> list[dict]:
@@ -151,13 +178,15 @@ def _pad_up(n: int, b: int) -> int:
     return -(-n // b) * b
 
 
-def _lstm_cell_analyze(p: Mapping[str, int], c: Mapping[str, int]) -> _Analysis:
+def _lstm_cell_analyze(p: Mapping[str, int], c: Mapping[str, int],
+                       dtype: str = "float32") -> _Analysis:
     bsz, d, hid = p["batch"], p["d_in"], p["hidden"]
     bb = c["block_b"]
     nb = _pad_up(bsz, bb) // bb
-    traffic = nb * _lstm_weight_bytes(p) + bsz * (d + 4 * hid) * F32  # x,h,c in; h,c out
+    wbytes = _lstm_weight_bytes(p, dtype)
+    traffic = nb * wbytes + bsz * (d + 4 * hid) * F32  # x,h,c in; h,c out
     resident = (
-        _lstm_weight_bytes(p)
+        wbytes
         + bb * (d + 2 * hid) * F32      # x, h, c blocks
         + bb * 2 * hid * F32            # outputs
         + bb * 4 * hid * F32            # gate pre-activations
@@ -170,24 +199,66 @@ def _lstm_cell_analyze(p: Mapping[str, int], c: Mapping[str, int]) -> _Analysis:
     )
 
 
-def _lstm_seq_analyze(p: Mapping[str, int], c: Mapping[str, int]) -> _Analysis:
-    bsz, seq, d, hid = p["batch"], p["seq"], p["d_in"], p["hidden"]
-    bb = c["block_b"]
-    nb = _pad_up(bsz, bb) // bb
-    # Residency win: weights stream once per BATCH BLOCK, not once per step.
-    traffic = nb * _lstm_weight_bytes(p) + bsz * seq * (d + hid) * F32
-    # The batch tile's WHOLE sequence is a VMEM block (grid walks batch
-    # only; time loops in-kernel) — this is what bounds bb for long S.
-    resident = (
-        _lstm_weight_bytes(p)
-        + seq * bb * d * F32            # x sequence tile
+def _lstm_seq_resident_act_bytes(seq: int, bb: int, d: int, hid: int) -> float:
+    """The f32 per-tile working set shared by seq and stack kernels:
+    activations/carries stay f32 even when the weights are int8."""
+    return float(
+        seq * bb * d * F32              # x sequence tile
         + seq * bb * hid * F32          # hs output tile
         + seq * bb * 4 * hid * F32      # zx: precomputed input projections
         + 4 * bb * hid * F32            # h/c carry + final-state outputs
         + bb * 4 * hid * F32            # gate pre-activations
     )
+
+
+def _lstm_seq_analyze(p: Mapping[str, int], c: Mapping[str, int],
+                      dtype: str = "float32") -> _Analysis:
+    bsz, seq, d, hid = p["batch"], p["seq"], p["d_in"], p["hidden"]
+    bb = c["block_b"]
+    nb = _pad_up(bsz, bb) // bb
+    wbytes = _lstm_weight_bytes(p, dtype)
+    # Residency win: weights stream once per BATCH BLOCK, not once per step
+    # — and at the weight dtype, so int8 streams 4× fewer bytes.
+    traffic = nb * wbytes + bsz * seq * (d + hid) * F32
+    # The batch tile's WHOLE sequence is a VMEM block (grid walks batch
+    # only; time loops in-kernel) — this is what bounds bb for long S.
+    # int8 weights shrink the resident term, admitting wider bb.
+    resident = wbytes + _lstm_seq_resident_act_bytes(seq, bb, d, hid)
     return _Analysis(
         flops=2.0 * bsz * seq * (d + hid) * 4 * hid,
+        hbm_bytes=float(traffic),
+        vmem_bytes=float(resident),
+        grid_steps=nb,
+    )
+
+
+def _lstm_stack_analyze(p: Mapping[str, int], c: Mapping[str, int],
+                        dtype: str = "float32") -> _Analysis:
+    """Layer-fused stack: per-layer traffic model.
+
+    L sequential ``lstm_seq`` calls pay the inter-layer h sequence through
+    HBM (write + read of B·S·H f32) at every boundary; the fused stack
+    keeps it in a VMEM scratch tile, so HBM traffic is one x in, one hs
+    out, plus ONE weight stream per batch block covering all L layers."""
+    bsz, seq, d, hid = p["batch"], p["seq"], p["d_in"], p["hidden"]
+    layers = p["layers"]
+    bb = c["block_b"]
+    nb = _pad_up(bsz, bb) // bb
+    wbytes = _lstm_stack_weight_bytes(p, dtype)
+    traffic = (
+        nb * wbytes
+        + bsz * seq * (d + hid) * F32       # x in, last layer's hs out
+        + bsz * 2 * layers * hid * F32      # per-layer final states out
+    )
+    resident = (
+        wbytes
+        + _lstm_seq_resident_act_bytes(seq, bb, d, hid)
+        + seq * bb * hid * F32              # inter-layer VMEM scratch tile
+    )
+    flops = 2.0 * bsz * seq * (d + hid) * 4 * hid \
+        + (layers - 1) * 2.0 * bsz * seq * (2 * hid) * 4 * hid
+    return _Analysis(
+        flops=flops,
         hbm_bytes=float(traffic),
         vmem_bytes=float(resident),
         grid_steps=nb,
@@ -199,6 +270,7 @@ _KERNELS: dict[str, tuple[Callable, Callable]] = {
     "flash_attention": (_flash_candidates, _flash_analyze),
     "lstm_cell": (_lstm_blocks, _lstm_cell_analyze),
     "lstm_seq": (_lstm_blocks, _lstm_seq_analyze),
+    "lstm_stack": (_lstm_blocks, _lstm_stack_analyze),
 }
 
 
@@ -206,15 +278,19 @@ _KERNELS: dict[str, tuple[Callable, Callable]] = {
 # Roofline scoring (reuses core.cost_model arithmetic)
 # ---------------------------------------------------------------------------
 def vmem_footprint_bytes(kernel: str, problem: Mapping[str, int],
-                         candidate: Mapping[str, int]) -> float:
-    """Double-buffered VMEM bytes the candidate keeps resident."""
+                         candidate: Mapping[str, int], *,
+                         dtype: str = "float32") -> float:
+    """Double-buffered VMEM bytes the candidate keeps resident (dtype-aware:
+    int8-resident LSTM weights cost 1 B/elem + f32 scales)."""
     _, analyze = _KERNELS[kernel]
-    return PIPELINE_FACTOR * analyze(problem, candidate).vmem_bytes
+    return PIPELINE_FACTOR * analyze(problem, candidate, dtype).vmem_bytes
 
 
 def is_feasible(kernel: str, problem: Mapping[str, int],
-                candidate: Mapping[str, int], chip: TPUChip = DEFAULT_CHIP) -> bool:
-    return vmem_footprint_bytes(kernel, problem, candidate) <= chip.vmem_bytes
+                candidate: Mapping[str, int], chip: TPUChip = DEFAULT_CHIP,
+                *, dtype: str = "float32") -> bool:
+    return vmem_footprint_bytes(kernel, problem, candidate,
+                                dtype=dtype) <= chip.vmem_bytes
 
 
 def predict_time_s(kernel: str, problem: Mapping[str, int],
@@ -222,9 +298,8 @@ def predict_time_s(kernel: str, problem: Mapping[str, int],
                    chip: TPUChip = DEFAULT_CHIP) -> float:
     """Analytic step-time: cost_model roofline + per-grid-step overhead."""
     _, analyze = _KERNELS[kernel]
-    a = analyze(problem, candidate)
-    if "int8" in dtype:  # MXU runs int8 at its own (2×) peak
-        chip = dataclasses.replace(chip, peak_flops=chip.peak_int8_ops)
+    a = analyze(problem, candidate, dtype)
+    chip = chip_for_dtype(chip, dtype)  # MXU runs int8 at its own (2×) peak
     r = Roofline(
         flops_per_dev=a.flops,
         hbm_bytes_per_dev=a.hbm_bytes,
@@ -237,12 +312,16 @@ def predict_time_s(kernel: str, problem: Mapping[str, int],
 
 
 def feasible_candidates(kernel: str, problem: Mapping[str, int],
-                        chip: TPUChip = DEFAULT_CHIP) -> list[dict]:
+                        chip: TPUChip = DEFAULT_CHIP, *,
+                        dtype: str = "float32") -> list[dict]:
     gen, _ = _KERNELS[kernel]
-    cands = [c for c in gen(problem) if is_feasible(kernel, problem, c, chip)]
+    cands = [c for c in gen(problem)
+             if is_feasible(kernel, problem, c, chip, dtype=dtype)]
     if not cands:  # degenerate budget: keep the smallest-footprint candidate
-        cands = sorted(gen(problem),
-                       key=lambda c: vmem_footprint_bytes(kernel, problem, c))[:1]
+        cands = sorted(
+            gen(problem),
+            key=lambda c: vmem_footprint_bytes(kernel, problem, c, dtype=dtype),
+        )[:1]
     return cands
 
 
@@ -341,13 +420,13 @@ def autotune(kernel: str, problem: Mapping[str, int], *, dtype: str = "float32",
             _CACHE[key] = disk[key]
             return dict(disk[key])
 
-    cands = feasible_candidates(kernel, problem, chip)
+    cands = feasible_candidates(kernel, problem, chip, dtype=dtype)
     _, analyze = _KERNELS[kernel]
     scored = sorted(
         cands,
         key=lambda c: (
             predict_time_s(kernel, problem, c, dtype=dtype, chip=chip),
-            analyze(problem, c).grid_steps,
+            analyze(problem, c, dtype).grid_steps,
             tuple(sorted(c.items())),
         ),
     )

@@ -1,16 +1,46 @@
 """Shared micro-benchmark harness for the LSTM kernel mappings.
 
-Wall-clock on shared CPU hosts is noisy (±50% per sample), so both paths
-are sampled INTERLEAVED — scheduler drift hits each equally — and the
+Wall-clock on shared CPU hosts is noisy (±50% per sample), so competing
+paths are sampled INTERLEAVED — scheduler drift hits each equally — and the
 median per-call time is reported.  Compilation happens outside the timed
 region.  Used by ``benchmarks/paper_lstm.py`` and the
 ``repro.launch.train --paper-lstm`` plan so the methodology cannot drift
-between the two.
+between the two, and by ``make_measure_fn`` — the empirical ``measure_fn``
+the autotuner uses to re-rank its analytic top-k
+(``benchmarks/run.py`` wires it up under ``REPRO_AUTOTUNE_MEASURE=1``).
 """
 from __future__ import annotations
 
 import statistics
 import time
+
+
+def _interleaved_medians_us(fns, n: int):
+    """Median per-call µs for each compiled thunk, sampled round-robin."""
+    for fn in fns:  # compile outside the timed region
+        fn()
+    samples = [[] for _ in fns]
+    for _ in range(n):
+        for out, fn in zip(samples, fns):
+            t0 = time.perf_counter()
+            fn()
+            out.append(time.perf_counter() - t0)
+    return [statistics.median(s) * 1e6 for s in samples]
+
+
+def _lstm_inputs(batch: int, seq: int, d_in: int, hidden: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.lstm import lstm_defs
+    from repro.models.params import init_params
+
+    key = jax.random.PRNGKey(0)
+    params = jax.tree.map(
+        lambda t: t.astype(jnp.float32), init_params(lstm_defs(d_in, hidden), key)
+    )
+    x = jax.random.normal(key, (batch, seq, d_in), jnp.float32)
+    return params, x
 
 
 def compare_lstm_paths(batch: int, seq: int, d_in: int, hidden: int,
@@ -21,26 +51,141 @@ def compare_lstm_paths(batch: int, seq: int, d_in: int, hidden: int,
     and both get autotuned block sizes.
     """
     import jax
-    import jax.numpy as jnp
 
-    from repro.models.lstm import lstm_apply, lstm_defs
+    from repro.models.lstm import lstm_apply
+
+    params, x = _lstm_inputs(batch, seq, d_in, hidden)
+    seq_fn = jax.jit(lambda p, xx: lstm_apply(p, xx, impl=impl, fused="pallas_seq"))
+    step_fn = jax.jit(lambda p, xx: lstm_apply(p, xx, impl=impl, fused="pallas_step"))
+    t_seq, t_step = _interleaved_medians_us(
+        [lambda: seq_fn(params, x).block_until_ready(),
+         lambda: step_fn(params, x).block_until_ready()], n,
+    )
+    return t_seq, t_step
+
+
+def compare_lstm_quant(batch: int, seq: int, d_in: int, hidden: int,
+                       *, n: int = 33, impl: str = "exact"):
+    """Median per-call µs of (f32 ``pallas_seq``, int8-resident
+    ``pallas_seq_q8``) at EQUAL (B, S, D, H).
+
+    The int8 path runs over pre-quantized weights (quantization is a
+    one-time deployment cost, outside the timed region) and gets its own
+    autotuned — typically wider — batch tile.
+    """
+    import jax
+
+    from repro.kernels.lstm_quant import quantize_lstm_weights
+    from repro.kernels.lstm_seq import lstm_seq_fused, lstm_seq_fused_quantized
+
+    params, x = _lstm_inputs(batch, seq, d_in, hidden)
+    qw = quantize_lstm_weights(params["w"], params["u"], params["b"], hidden)
+    f32_fn = jax.jit(lambda p, xx: lstm_seq_fused(
+        xx, p["w"], p["u"], p["b"], impl=impl))
+    q8_fn = jax.jit(lambda q, xx: lstm_seq_fused_quantized(xx, q, impl=impl))
+    t_f32, t_q8 = _interleaved_medians_us(
+        [lambda: f32_fn(params, x).block_until_ready(),
+         lambda: q8_fn(qw, x).block_until_ready()], n,
+    )
+    return t_f32, t_q8
+
+
+def compare_lstm_stack(batch: int, seq: int, d_in: int, hidden: int,
+                       layers: int, *, n: int = 33, impl: str = "exact",
+                       quantized: bool = False):
+    """Median per-call µs of (layer-fused stack, L sequential ``lstm_seq``
+    calls) — same weights, same recurrence, one vs L ``pallas_call``s."""
+    import jax
+
+    from repro.kernels.lstm_seq import lstm_seq_fused, lstm_stack_fused
+    from repro.models.lstm import lstm_stack_defs
     from repro.models.params import init_params
+
+    import jax.numpy as jnp
 
     key = jax.random.PRNGKey(0)
     params = jax.tree.map(
-        lambda t: t.astype(jnp.float32), init_params(lstm_defs(d_in, hidden), key)
+        lambda t: t.astype(jnp.float32),
+        init_params(lstm_stack_defs(d_in, hidden, layers), key),
     )
     x = jax.random.normal(key, (batch, seq, d_in), jnp.float32)
-    seq_fn = jax.jit(lambda p, xx: lstm_apply(p, xx, impl=impl, fused="pallas_seq"))
-    step_fn = jax.jit(lambda p, xx: lstm_apply(p, xx, impl=impl, fused="pallas_step"))
-    seq_fn(params, x).block_until_ready()   # compile outside the timed region
-    step_fn(params, x).block_until_ready()
-    t_seq, t_step = [], []
-    for _ in range(n):
-        t0 = time.perf_counter()
-        seq_fn(params, x).block_until_ready()
-        t_seq.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        step_fn(params, x).block_until_ready()
-        t_step.append(time.perf_counter() - t0)
-    return statistics.median(t_seq) * 1e6, statistics.median(t_step) * 1e6
+
+    stack_fn = jax.jit(lambda ps, xx: lstm_stack_fused(
+        xx, ps, impl=impl, quantized=quantized))
+
+    def sequential(ps, xx):
+        h = xx
+        for p in ps:
+            h = lstm_seq_fused(h, p["w"], p["u"], p["b"], impl=impl)
+        return h
+
+    seq_fn = jax.jit(sequential)
+    t_stack, t_seq = _interleaved_medians_us(
+        [lambda: stack_fn(params, x).block_until_ready(),
+         lambda: seq_fn(params, x).block_until_ready()], n,
+    )
+    return t_stack, t_seq
+
+
+def make_measure_fn(kernel: str, problem: dict, *, dtype: str = "float32",
+                    impl: str = "exact", n: int = 5):
+    """Build the autotuner's empirical ``measure_fn`` (candidate → seconds)
+    for an LSTM kernel: runs the REAL kernel at the candidate's block size
+    in the current execution mode and returns the median per-call seconds.
+
+    This is step 3 of the Generator methodology — analytical pruning picks
+    the top-k, empirical timing ranks the survivors (§2.2/§2.3).
+    """
+    import jax
+
+    from repro.kernels.lstm_quant import quantize_lstm_weights
+    from repro.kernels.lstm_seq import (
+        lstm_seq_fused,
+        lstm_seq_fused_quantized,
+        lstm_stack_fused,
+    )
+
+    if kernel not in ("lstm_seq", "lstm_stack"):
+        raise ValueError(f"no empirical measure for kernel {kernel!r}")
+    b, s, d, h = problem["batch"], problem["seq"], problem["d_in"], problem["hidden"]
+    quantized = "int8" in dtype
+
+    if kernel == "lstm_seq":
+        params, x = _lstm_inputs(b, s, d, h)
+        qw = quantize_lstm_weights(params["w"], params["u"], params["b"], h)
+
+        def build(block_b: int):
+            if quantized:
+                return jax.jit(lambda: lstm_seq_fused_quantized(
+                    x, qw, impl=impl, block_b=block_b))
+            return jax.jit(lambda: lstm_seq_fused(
+                x, params["w"], params["u"], params["b"], impl=impl,
+                block_b=block_b))
+    else:
+        import jax.numpy as jnp
+
+        from repro.models.lstm import lstm_stack_defs
+        from repro.models.params import init_params
+
+        key = jax.random.PRNGKey(0)
+        params = jax.tree.map(
+            lambda t: t.astype(jnp.float32),
+            init_params(lstm_stack_defs(d, h, problem["layers"]), key),
+        )
+        x = jax.random.normal(key, (b, s, d), jnp.float32)
+
+        def build(block_b: int):
+            return jax.jit(lambda: lstm_stack_fused(
+                x, params, impl=impl, block_b=block_b, quantized=quantized))
+
+    def measure(candidate: dict) -> float:
+        fn = build(int(candidate["block_b"]))
+        fn().block_until_ready()  # compile outside the timed region
+        samples = []
+        for _ in range(max(n, 1)):
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            samples.append(time.perf_counter() - t0)
+        return statistics.median(samples)
+
+    return measure

@@ -1,0 +1,94 @@
+"""Weight quantization + scale plumbing for the int8 sequence-resident LSTM.
+
+The paper's precision axis (Rybalkin et al.: reduced precision → better
+memory/energy/throughput) composes with the residency axis from
+``kernels.lstm_seq``: the LSTM weights ``w`` (D, 4H) and ``u`` (H, 4H) are
+the VMEM-resident tensors, so quantizing THEM to int8 shrinks the resident
+footprint 4× vs f32 — VMEM the autotuner immediately converts into wider
+``block_b`` batch tiles (see ``autotune._lstm_seq_analyze``).
+
+Conventions follow ``kernels.int8_matmul`` exactly: symmetric per-output-
+channel scales — here "per gate column", one f32 scale per column of the
+packed (.., 4H) gate axis, produced by ``ref.quantize_colwise``. The bias
+stays f32 (it is 4H elements — quantizing it saves nothing and costs
+accuracy). Dequantization happens at the MXU boundary inside the kernel:
+``(x @ w_q) * sw`` — column scales commute with the matmul, so the scale
+multiply is a cheap VPU epilogue, and the int8→f32 casts sit inside the
+matmuls so no persistent f32 weight copy is forced across the recurrence.
+
+Weights are PACKED before quantization (gate columns i,f,g,o → i,f,o,g,
+``lstm_seq._pack_ifog``) so the quantized tensors drop straight into the
+packed-gate kernels; since the scales are per-column, packing and
+quantization commute.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import quantize_colwise
+
+
+class QuantizedLSTMWeights(NamedTuple):
+    """One layer's packed, per-gate-column-quantized weights (a pytree)."""
+
+    w_q: jax.Array   # (D, 4H) int8, gate columns packed [i, f, o, g]
+    u_q: jax.Array   # (H, 4H) int8, same packing
+    b: jax.Array     # (4H,) f32, same packing
+    w_scale: jax.Array  # (4H,) f32 per-gate-column scales for w_q
+    u_scale: jax.Array  # (4H,) f32 per-gate-column scales for u_q
+
+    @property
+    def hidden(self) -> int:
+        return self.u_q.shape[0]
+
+
+def quantize_lstm_weights(w, u, b, hidden: int | None = None) -> QuantizedLSTMWeights:
+    """Pack gate columns then quantize w/u per gate column to int8.
+
+    w: (D, 4H) f32; u: (H, 4H) f32; b: (4H,) f32 — the ``lstm_defs`` layout
+    with gate order i, f, g, o. Returns packed [i, f, o, g] int8 weights +
+    f32 scales, ready for the ``lstm_seq`` quantized kernels.
+    """
+    from repro.kernels.lstm_seq import _pack_ifog
+
+    hidden = u.shape[0] if hidden is None else hidden
+    w, u, b = _pack_ifog(w, u, b, hidden)
+    w_q, w_scale = quantize_colwise(w)
+    u_q, u_scale = quantize_colwise(u)
+    return QuantizedLSTMWeights(w_q, u_q, b.astype(jnp.float32), w_scale, u_scale)
+
+
+def quantize_lstm_stack(layers) -> list[QuantizedLSTMWeights]:
+    """Quantize a list of (w, u, b) layer triples (or param dicts)."""
+    out = []
+    for layer in layers:
+        if isinstance(layer, dict):
+            layer = (layer["w"], layer["u"], layer["b"])
+        w, u, b = layer
+        out.append(quantize_lstm_weights(w, u, b))
+    return out
+
+
+def dequantize(q: QuantizedLSTMWeights) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """f32 (w, u, b) in PACKED gate order — the exact values the quantized
+    kernels compute with (oracle for tests)."""
+    w = q.w_q.astype(jnp.float32) * q.w_scale[None, :]
+    u = q.u_q.astype(jnp.float32) * q.u_scale[None, :]
+    return w, u, q.b
+
+
+def resident_weight_bytes(d_in: int, hidden: int, dtype: str = "float32") -> float:
+    """VMEM-resident bytes for one layer's weights at ``dtype``.
+
+    int8 pays the (D+H)·4H payload at 1 B/elem plus two 4H f32 scale
+    vectors; the 4H bias is always f32. At D=H=256 this is 2.10 MB (f32)
+    vs 0.54 MB (int8) — a 3.9× footprint reduction the autotuner converts
+    into wider batch tiles.  Delegates to the autotuner's footprint model
+    (``autotune._lstm_weight_bytes``) so the two can never diverge.
+    """
+    from repro.kernels.autotune import _lstm_weight_bytes
+
+    return _lstm_weight_bytes({"d_in": d_in, "hidden": hidden}, dtype)

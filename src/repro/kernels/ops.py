@@ -17,7 +17,12 @@ from repro.kernels.activations import activation as _activation
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import int8_matmul as _int8_matmul
 from repro.kernels.lstm_cell import lstm_cell_fused as _lstm_cell
-from repro.kernels.lstm_seq import lstm_seq_fused as _lstm_seq
+from repro.kernels.lstm_seq import (
+    lstm_seq_fused as _lstm_seq,
+    lstm_seq_fused_q8 as _lstm_seq_q8,
+    lstm_seq_fused_quantized as _lstm_seq_quantized,
+    lstm_stack_fused as _lstm_stack,
+)
 from repro.kernels.ref import quantize_colwise, quantize_rowwise
 
 # None → per-call auto-resolution (runtime.default_interpret); bool → forced.
@@ -43,6 +48,30 @@ def lstm_seq(x, w, u, b, *, impl: str = "exact", block_b="auto",
     """Sequence-resident fused LSTM: x (B, S, D) → hs (B, S, H)."""
     return _lstm_seq(x, w, u, b, impl=impl, block_b=block_b,
                      interpret=INTERPRET, return_state=return_state)
+
+
+def lstm_seq_q8(x, w, u, b, *, impl: str = "exact", block_b="auto",
+                return_state: bool = False):
+    """int8-resident sequence LSTM (quantize-on-the-fly f32 weights)."""
+    return _lstm_seq_q8(x, w, u, b, impl=impl, block_b=block_b,
+                        interpret=INTERPRET, return_state=return_state)
+
+
+def lstm_seq_quantized(x, qw, *, impl: str = "exact", block_b="auto",
+                       return_state: bool = False):
+    """int8-resident sequence LSTM over pre-quantized weights
+    (``lstm_quant.QuantizedLSTMWeights``)."""
+    return _lstm_seq_quantized(x, qw, impl=impl, block_b=block_b,
+                               interpret=INTERPRET, return_state=return_state)
+
+
+def lstm_stack(x, layers, *, impl: str = "exact", block_b="auto",
+               quantized: bool = False, return_state: bool = False):
+    """Layer-fused L-layer LSTM stack in one pallas_call: x (B, S, D) →
+    last layer's hs (B, S, H); inter-layer h stays in VMEM."""
+    return _lstm_stack(x, layers, impl=impl, block_b=block_b,
+                       quantized=quantized, interpret=INTERPRET,
+                       return_state=return_state)
 
 
 def int8_matmul(x_q, w_q, x_scale, w_scale, **kw):

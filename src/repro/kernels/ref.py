@@ -60,6 +60,42 @@ def lstm_cell_ref(x, h, c, w, u, b, *, impl: str = "exact"):
 
 
 # ---------------------------------------------------------------------------
+# Quantized sequence-resident LSTM (PACKED [i, f, o, g] gate layout)
+# ---------------------------------------------------------------------------
+def lstm_seq_q8_ref(x, w_q, u_q, b, w_scale, u_scale, *, impl: str = "exact"):
+    """Recurrence oracle for the int8-resident kernels: weights arrive
+    PACKED [i, f, o, g] and quantized per gate column (the
+    ``lstm_quant.QuantizedLSTMWeights`` layout), dequantized AFTER each
+    matmul exactly like the kernel's in-register epilogue.
+
+    x: (B, S, D) f32 → hs (B, S, H), final (h, c).
+    """
+    sig = act_mod.get_sigmoid(impl)
+    tnh = act_mod.get_tanh(impl)
+    bsz, seq, _ = x.shape
+    hidden = u_q.shape[0]
+    wf = w_q.astype(jnp.float32)
+    uf = u_q.astype(jnp.float32)
+    h = jnp.zeros((bsz, hidden), jnp.float32)
+    c = jnp.zeros((bsz, hidden), jnp.float32)
+    hs = []
+    for t in range(seq):
+        z = (
+            (x[:, t].astype(jnp.float32) @ wf) * w_scale[None, :]
+            + (h @ uf) * u_scale[None, :]
+            + b[None, :]
+        )
+        i = sig(z[:, :hidden])
+        f = sig(z[:, hidden : 2 * hidden])
+        o = sig(z[:, 2 * hidden : 3 * hidden])
+        g = tnh(z[:, 3 * hidden :])
+        c = f * c + i * g
+        h = o * tnh(c)
+        hs.append(h)
+    return jnp.stack(hs, axis=1).astype(x.dtype), h, c
+
+
+# ---------------------------------------------------------------------------
 # Int8 matmul with per-channel scales
 # ---------------------------------------------------------------------------
 def int8_matmul_ref(x_q, w_q, x_scale, w_scale):

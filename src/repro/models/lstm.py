@@ -19,6 +19,17 @@ The RTL-template story maps onto four JAX execution paths, selected by the
                    VMEM-resident across all timesteps, h/c carried in VMEM
                    scratch — the paper's on-chip BRAM residency mapped onto
                    TPU VMEM. Preferred full-sequence path.
+  "pallas_seq_q8" — the same sequence-resident kernel with the weights held
+                   in VMEM as int8 (per-gate-column scales,
+                   ``repro.kernels.lstm_quant``): 4× smaller resident
+                   footprint → the autotuner picks wider batch tiles. The
+                   paper's precision axis composed with its residency axis.
+
+Multi-layer stacks go through :func:`lstm_stack_apply`, whose
+``fused="pallas_stack"``/``"pallas_stack_q8"`` modes chain all L layers in
+one ``pallas_call`` with the inter-layer h sequence kept in VMEM scratch —
+replacing the Python-level per-layer loop (still available as the baseline:
+any single-layer ``fused`` mode loops layer by layer).
 
 All paths honour the activation-implementation axis (RQ1): sigmoid/tanh in
 {exact, pwl, lut, hard} variants from ``repro.models.activations``.
@@ -31,7 +42,8 @@ import jax.numpy as jnp
 from repro.models.activations import get_sigmoid, get_tanh
 from repro.models.params import ParamDef
 
-PALLAS_PATHS = ("pallas_seq", "pallas_step")
+PALLAS_PATHS = ("pallas_seq", "pallas_seq_q8", "pallas_step")
+STACK_FUSED_MODES = ("pallas_stack", "pallas_stack_q8")
 
 
 def lstm_defs(d_in: int, hidden: int) -> dict:
@@ -64,17 +76,41 @@ def lstm_cell(params, x_t, h, c, *, impl: str = "exact", fused: bool = True):
     return h_new, c_new
 
 
+def _check_fused_mode(fused, allowed, what: str):
+    """Single up-front gate for every string ``fused`` mode — unknown modes
+    fail HERE, before any early return can route past the check."""
+    if isinstance(fused, str) and fused not in allowed:
+        known = ", ".join(repr(m) for m in allowed)
+        raise ValueError(f"unknown {what} fused mode {fused!r}; expected one of "
+                         f"{{False, True, {known}}}")
+
+
 def lstm_apply(params, x, *, impl: str = "exact", fused: bool | str = True,
                block_b: int | str = "auto"):
     """Full-sequence LSTM. x: (B, S, D_in) → (B, S, H).
 
-    ``fused`` ∈ {False, True, "pallas_step", "pallas_seq"} — see the module
-    docstring. ``block_b`` only applies to the Pallas paths.
+    ``fused`` selects the execution path (see the module docstring):
+
+      False           four separate gate matmuls per step (minimal-ALU
+                      baseline template) under ``jax.lax.scan``
+      True            one fused (D+H, 4H) gate matmul per step under scan,
+                      left to XLA (the paper's pipelined template)
+      "pallas_step"   per-step Pallas cell kernel + scan (weights
+                      re-streamed every timestep — benchmark baseline)
+      "pallas_seq"    ONE sequence-resident ``pallas_call``; f32 weights
+                      VMEM-resident across all timesteps (preferred)
+      "pallas_seq_q8" sequence-resident with int8 VMEM-resident weights
+                      (per-gate-column scales; widest batch tiles)
+
+    Any other string raises ``ValueError`` (checked up-front, before any
+    path dispatch). ``block_b`` only applies to the Pallas paths.
     """
-    if fused == "pallas_seq":
+    _check_fused_mode(fused, PALLAS_PATHS, "lstm_apply")
+    if fused in ("pallas_seq", "pallas_seq_q8"):
         from repro.kernels import ops
 
-        return ops.lstm_seq(
+        op = ops.lstm_seq if fused == "pallas_seq" else ops.lstm_seq_q8
+        return op(
             x, params["w"], params["u"], params["b"], impl=impl, block_b=block_b
         )
 
@@ -104,8 +140,6 @@ def lstm_apply(params, x, *, impl: str = "exact", fused: bool | str = True,
             )
             return (h, c), h
 
-    elif isinstance(fused, str):
-        raise ValueError(f"unknown fused mode {fused!r}")
     else:
 
         def step(carry, x_t):
@@ -115,3 +149,39 @@ def lstm_apply(params, x, *, impl: str = "exact", fused: bool | str = True,
 
     (_, _), hs = jax.lax.scan(step, (h0, c0), x.swapaxes(0, 1))
     return hs.swapaxes(0, 1)
+
+
+def lstm_stack_defs(d_in: int, hidden: int, layers: int) -> list[dict]:
+    """ParamDef tree for an L-layer stack: layer 0 projects d_in → H, the
+    rest H → H (a list of per-layer ``lstm_defs`` dicts)."""
+    if layers < 1:
+        raise ValueError(f"layers must be >= 1, got {layers}")
+    return [lstm_defs(d_in if l == 0 else hidden, hidden) for l in range(layers)]
+
+
+def lstm_stack_apply(params, x, *, impl: str = "exact",
+                     fused: bool | str = "pallas_stack",
+                     block_b: int | str = "auto"):
+    """L-layer LSTM stack. x: (B, S, D_in) → last layer's hs (B, S, H).
+
+    ``params`` is the list from :func:`lstm_stack_defs`.  ``fused``:
+
+      "pallas_stack"     ONE ``pallas_call`` chains all L layers; the
+                         inter-layer h sequence lives in a VMEM scratch
+                         tile, never bouncing through HBM (preferred)
+      "pallas_stack_q8"  the same with every layer's weights int8-resident
+      anything accepted by :func:`lstm_apply` — the Python-level per-layer
+                         loop baseline (L separate kernel calls)
+    """
+    _check_fused_mode(fused, STACK_FUSED_MODES + PALLAS_PATHS, "lstm_stack_apply")
+    if fused in STACK_FUSED_MODES:
+        from repro.kernels import ops
+
+        return ops.lstm_stack(
+            x, params, impl=impl, block_b=block_b,
+            quantized=(fused == "pallas_stack_q8"),
+        )
+    h = x
+    for layer in params:
+        h = lstm_apply(layer, h, impl=impl, fused=fused, block_b=block_b)
+    return h

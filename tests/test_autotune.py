@@ -81,6 +81,81 @@ def test_lstm_seq_long_sequence_narrows_batch_tile():
 
 
 # ---------------------------------------------------------------------------
+# dtype-aware footprints (int8 residency) + the lstm_stack traffic model
+# ---------------------------------------------------------------------------
+def test_int8_weights_shrink_footprint_and_widen_tile():
+    """int8-resident weights cost 4× less VMEM than f32, so at a shape
+    where the f32 weight block crowds the budget the int8 tuner must admit
+    a WIDER batch tile."""
+    prob = {"batch": 128, "seq": 16, "d_in": 256, "hidden": 256}
+    cand = {"block_b": 64}
+    fp = at.vmem_footprint_bytes("lstm_seq", prob, cand, dtype="float32")
+    q8 = at.vmem_footprint_bytes("lstm_seq", prob, cand, dtype="int8")
+    # difference is exactly the weight payload shrink (minus scale vectors)
+    assert q8 < fp
+    best_fp = at.autotune("lstm_seq", prob, dtype="float32")
+    best_q8 = at.autotune("lstm_seq", prob, dtype="int8")
+    assert best_q8["block_b"] > best_fp["block_b"], (best_fp, best_q8)
+
+
+def test_dtype_cache_keys_distinct():
+    """float32 and int8 must never share autotune winners: distinct cache
+    keys, independently cached entries."""
+    prob = {"batch": 128, "seq": 16, "d_in": 256, "hidden": 256}
+    k_fp = at.cache_key("lstm_seq", prob, "float32")
+    k_q8 = at.cache_key("lstm_seq", prob, "int8")
+    assert k_fp != k_q8
+    best_fp = at.autotune("lstm_seq", prob, dtype="float32")
+    best_q8 = at.autotune("lstm_seq", prob, dtype="int8")
+    assert at._CACHE[k_fp] == best_fp
+    assert at._CACHE[k_q8] == best_q8
+    assert best_fp != best_q8  # at this shape the winners genuinely differ
+
+
+def test_lstm_stack_model_beats_sequential_traffic():
+    """The fused stack's HBM traffic must undercut L sequential lstm_seq
+    calls (which bounce the inter-layer h sequence through HBM)."""
+    prob = {"batch": 32, "seq": 28, "d_in": 128, "hidden": 128, "layers": 3}
+    best = at.autotune("lstm_stack", prob, dtype="float32")
+    assert at.vmem_footprint_bytes("lstm_stack", prob, best,
+                                   dtype="float32") <= DEFAULT_CHIP.vmem_bytes
+    seq_prob = {k: v for k, v in prob.items() if k != "layers"}
+    stack = at._lstm_stack_analyze(prob, best, "float32")
+    per_layer = at._lstm_seq_analyze(seq_prob, best, "float32")
+    assert stack.hbm_bytes < prob["layers"] * per_layer.hbm_bytes
+    # int8 stack fits the same tile in less VMEM
+    assert at.vmem_footprint_bytes("lstm_stack", prob, best, dtype="int8") < \
+        at.vmem_footprint_bytes("lstm_stack", prob, best, dtype="float32")
+
+
+def test_measured_refinement_via_bench_driver(monkeypatch):
+    """The benchmarks/run.py hook (REPRO_AUTOTUNE_MEASURE=1) re-ranks the
+    analytic top-k with REAL kernel timings in interpret mode and caches
+    the measured winners."""
+    import sys
+    from pathlib import Path
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    monkeypatch.setenv("REPRO_AUTOTUNE_MEASURE", "1")
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    try:
+        from benchmarks import run as bench_run
+
+        assert bench_run.autotune_measure_enabled()
+        refined = bench_run.refine_lstm_autotune(quick=True, top_k=2)
+    finally:
+        sys.path.pop(0)
+    assert refined  # every bench shape got a measured winner...
+    for entry in refined:
+        key = at.cache_key(entry["kernel"], entry["problem"], entry["dtype"])
+        assert at._CACHE[key] == entry["best"]  # ...and it landed in the cache
+    kernels = {e["kernel"] for e in refined}
+    dtypes = {e["dtype"] for e in refined}
+    assert kernels == {"lstm_seq", "lstm_stack"}  # the fp32/int8/stack trio
+    assert dtypes == {"float32", "int8"}
+
+
+# ---------------------------------------------------------------------------
 # Determinism + cache
 # ---------------------------------------------------------------------------
 def test_choice_deterministic_and_cached(tmp_path, monkeypatch):

@@ -108,3 +108,51 @@ def test_tpu_backend_feasibility_flags_oversized():
     tiny = TPUCostBackend(cfg, "train_4k", MeshPlan(dp=1, tp=4))
     ok, why = tiny.feasible(DesignPoint.of())
     assert not ok and "HBM" in why
+
+
+def test_int8_arithmetic_intensity_terms():
+    """The dtype helpers behind the autotuner's int8 scoring: int8 runs at
+    the MXU's 2x peak (higher ridge point), and quantizing the resident
+    LSTM weights raises the kernel's ops/byte at identical FLOPs."""
+    from repro.core.cost_model import (
+        arithmetic_intensity,
+        chip_for_dtype,
+        dtype_bytes,
+        ridge_intensity,
+    )
+    from repro.core.energy import DEFAULT_CHIP
+    from repro.kernels.autotune import _lstm_seq_analyze
+
+    assert dtype_bytes("int8") == 1 and dtype_bytes("float32") == 4
+    assert dtype_bytes("lstm-int8") == 1  # substring form (cache-key dtypes)
+    assert chip_for_dtype(DEFAULT_CHIP, "int8").peak_flops == DEFAULT_CHIP.peak_int8_ops
+    assert chip_for_dtype(DEFAULT_CHIP, "float32") is DEFAULT_CHIP
+    assert ridge_intensity(dtype="int8") == pytest.approx(
+        2 * ridge_intensity(dtype="bfloat16")
+    )
+
+    prob = {"batch": 64, "seq": 28, "d_in": 256, "hidden": 256}
+    cand = {"block_b": 32}
+    fp = _lstm_seq_analyze(prob, cand, "float32")
+    q8 = _lstm_seq_analyze(prob, cand, "int8")
+    assert fp.flops == q8.flops  # same math, fewer weight bytes
+    assert arithmetic_intensity(q8.flops, q8.hbm_bytes) > \
+        arithmetic_intensity(fp.flops, fp.hbm_bytes)
+
+
+def test_lstm_quant_footprint_matches_autotune_model():
+    """lstm_quant.resident_weight_bytes IS the autotuner's weight-footprint
+    model (single source of truth), and the int8/f32 delta is exactly what
+    the VMEM feasibility check sees."""
+    from repro.kernels import autotune as at
+    from repro.kernels.lstm_quant import resident_weight_bytes
+
+    prob = {"batch": 128, "seq": 16, "d_in": 256, "hidden": 256}
+    cand = {"block_b": 64}
+    delta_model = resident_weight_bytes(256, 256, "float32") - \
+        resident_weight_bytes(256, 256, "int8")
+    delta_vmem = (
+        at.vmem_footprint_bytes("lstm_seq", prob, cand, dtype="float32")
+        - at.vmem_footprint_bytes("lstm_seq", prob, cand, dtype="int8")
+    )
+    assert delta_vmem == pytest.approx(at.PIPELINE_FACTOR * delta_model)

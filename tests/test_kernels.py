@@ -183,6 +183,143 @@ def test_lstm_layer_fused_equals_unfused():
 
 
 # ---------------------------------------------------------------------------
+# int8-resident sequence LSTM (precision × residency)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["exact", "pwl", "lut", "hard"])
+@pytest.mark.parametrize("b,s,d,hidden,block_b", [
+    (4, 7, 6, 20, 4),
+    (5, 9, 6, 20, 2),      # non-divisible batch → padding path
+])
+def test_lstm_seq_q8_matches_quantized_ref(impl, b, s, d, hidden, block_b):
+    """The int8 kernel computes EXACTLY the quantized recurrence (packed
+    weights, dequant-after-matmul) — quantization error lives in the
+    weights, not the kernel."""
+    from repro.kernels.lstm_quant import quantize_lstm_weights
+    from repro.kernels.lstm_seq import lstm_seq_fused_quantized
+
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, 4 * hidden), jnp.float32) * 0.3
+    u = jax.random.normal(ks[2], (hidden, 4 * hidden), jnp.float32) * 0.3
+    bias = jax.random.normal(ks[3], (4 * hidden,), jnp.float32) * 0.1
+    qw = quantize_lstm_weights(w, u, bias, hidden)
+    hs, (hn, cn) = lstm_seq_fused_quantized(
+        x, qw, impl=impl, block_b=block_b, interpret=True, return_state=True
+    )
+    hs_ref, h_ref, c_ref = ref.lstm_seq_q8_ref(
+        x, qw.w_q, qw.u_q, qw.b, qw.w_scale, qw.u_scale, impl=impl
+    )
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_ref), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hn), np.asarray(h_ref), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(cn), np.asarray(c_ref), atol=1e-4, rtol=1e-4)
+
+
+def test_lstm_seq_q8_close_to_fp32():
+    """8-bit per-gate-column scales bound the end-to-end drift vs the f32
+    sequence-resident path (atol appropriate to int8 weights)."""
+    from repro.kernels.lstm_seq import lstm_seq_fused, lstm_seq_fused_q8
+
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (8, 16, 12), jnp.float32)
+    w = jax.random.normal(ks[1], (12, 96), jnp.float32) * 0.3
+    u = jax.random.normal(ks[2], (24, 96), jnp.float32) * 0.3
+    bias = jax.random.normal(ks[3], (96,), jnp.float32) * 0.1
+    got = lstm_seq_fused_q8(x, w, u, bias, block_b=4, interpret=True)
+    want = lstm_seq_fused(x, w, u, bias, block_b=4, interpret=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 0.05, err  # |h| ≤ 1; int8 weight rounding stays small
+
+
+def test_lstm_apply_q8_mode():
+    """fused="pallas_seq_q8" routes through the quantized kernel and stays
+    close to the exact fused path."""
+    from repro.models.lstm import lstm_apply, lstm_defs
+    from repro.models.params import init_params
+
+    params = init_params(lstm_defs(6, 20), KEY)
+    params = jax.tree.map(lambda t: t.astype(jnp.float32), params)
+    x = jax.random.normal(KEY, (3, 11, 6), jnp.float32)
+    got = lstm_apply(params, x, fused="pallas_seq_q8")
+    want = lstm_apply(params, x, fused=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Layer-fused LSTM stacks (inter-layer h sequence stays in VMEM)
+# ---------------------------------------------------------------------------
+def _stack_params(d, hidden, layers, key):
+    from repro.models.lstm import lstm_stack_defs
+    from repro.models.params import init_params
+
+    params = init_params(lstm_stack_defs(d, hidden, layers), key)
+    return jax.tree.map(lambda t: t.astype(jnp.float32), params)
+
+
+@pytest.mark.parametrize("b,s,d,hidden,layers,block_b", [
+    (4, 7, 6, 20, 2, 4),
+    (5, 9, 6, 20, 3, 2),   # non-divisible batch → padding path
+])
+def test_lstm_stack_matches_sequential_fp32(b, s, d, hidden, layers, block_b):
+    """Layer-fused stack == L sequential lstm_seq calls, exactly (fp32)."""
+    from repro.kernels.lstm_seq import lstm_seq_fused, lstm_stack_fused
+
+    params = _stack_params(d, hidden, layers, KEY)
+    x = jax.random.normal(KEY, (b, s, d), jnp.float32)
+    got, (hn, cn) = lstm_stack_fused(
+        x, params, block_b=block_b, interpret=True, return_state=True
+    )
+    h = x
+    for p in params:
+        h, (h_fin, c_fin) = lstm_seq_fused(
+            h, p["w"], p["u"], p["b"], block_b=block_b, interpret=True,
+            return_state=True,
+        )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(h), atol=2e-5, rtol=2e-5)
+    assert hn.shape == (layers, b, hidden) and cn.shape == (layers, b, hidden)
+    np.testing.assert_allclose(np.asarray(hn[-1]), np.asarray(h_fin), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(cn[-1]), np.asarray(c_fin), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["exact", "hard"])
+def test_lstm_stack_q8_matches_quantized_ref(impl):
+    """Quantized stack == chaining the per-layer quantized oracle."""
+    from repro.kernels.lstm_quant import quantize_lstm_stack
+    from repro.kernels.lstm_seq import lstm_stack_fused
+
+    b, s, d, hidden, layers = 4, 7, 6, 20, 3
+    params = _stack_params(d, hidden, layers, KEY)
+    x = jax.random.normal(KEY, (b, s, d), jnp.float32)
+    got = lstm_stack_fused(x, params, impl=impl, block_b=4, interpret=True,
+                           quantized=True)
+    h = x
+    for q in quantize_lstm_stack(params):
+        h, _, _ = ref.lstm_seq_q8_ref(
+            h, q.w_q, q.u_q, q.b, q.w_scale, q.u_scale, impl=impl
+        )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(h), atol=1e-4, rtol=1e-4)
+
+
+def test_lstm_stack_apply_paths_agree():
+    """models-level stack API: fused stack == per-layer loop baseline, and
+    the degenerate 1-layer stack == plain lstm_apply."""
+    from repro.models.lstm import lstm_apply, lstm_stack_apply
+
+    params = _stack_params(6, 20, 2, KEY)
+    x = jax.random.normal(KEY, (3, 9, 6), jnp.float32)
+    want = lstm_stack_apply(params, x, fused="pallas_seq")  # per-layer loop
+    got = lstm_stack_apply(params, x, fused="pallas_stack")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+    one = _stack_params(6, 20, 1, KEY)
+    np.testing.assert_allclose(
+        np.asarray(lstm_stack_apply(one, x, fused="pallas_stack")),
+        np.asarray(lstm_apply(one[0], x, fused="pallas_seq")),
+        atol=2e-5, rtol=2e-5,
+    )
+    with pytest.raises(ValueError):
+        lstm_stack_apply(params, x, fused="not-a-mode")
+
+
+# ---------------------------------------------------------------------------
 # Int8 matmul (precision axis)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 256, 128), (32, 64, 96)])
