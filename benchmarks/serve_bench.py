@@ -1,56 +1,82 @@
-"""Serving benchmark: continuous batching vs the static-batch baseline.
+"""Serving benchmark: static vs continuous vs chunked-prefill batching.
 
-One bursty (Markov-modulated) arrival stream is served twice on the SAME
-engine with the SAME measured step costs and the SAME online adaptive
-duty-cycle policy class:
+One bursty LONG-PROMPT (Markov-modulated) arrival stream is served three
+ways on the SAME engine with the SAME online adaptive duty-cycle policy
+class and ONE shared accelerator cost model:
 
   static      wait for a full batch (or flush timeout), pad every request to
               the cohort's longest prompt and largest token budget, lockstep
-              — the pre-scheduler WorkloadAwareServer serving model
-  continuous  admit into free slots mid-decode, one jitted masked decode
-              step per tick, power follows measured slot occupancy
+  continuous  admit into free slots mid-decode with BLOCKING prefill — each
+              admission stalls the whole pool for its prompt's duration
+  chunked     the same scheduler with chunked admission: FIFO same-length
+              groups advance ``--chunk`` prompt tokens per tick between
+              masked decode steps, so a long prompt no longer freezes the
+              pool (the head-of-line blocking fix)
 
-Reported per mode: items/J, p50/p99 latency, reloads — the headline derived
-metrics go into the BENCH_<timestamp>.json artifact (via benchmarks/run.py,
-or standalone: ``python benchmarks/serve_bench.py --quick``).
+The virtual-time/energy ledger uses a FIXED target-accelerator cost model
+(decode step 4 ms; prefill affine in tokens, 1 ms + 1 ms/token — a 64-token
+blocking prefill stalls the pool for ~16 decode steps), so every derived
+ratio is DETERMINISTIC given the seed and CI gates on them via
+``scripts/check_bench.py``. Tokens still come from real jitted execution.
+
+Reported per mode: items/J, p50/p99 latency, reloads; headline ratios go
+into the BENCH_<timestamp>.json artifact (via benchmarks/run.py, or
+standalone: ``python benchmarks/serve_bench.py --quick``).
 """
 import argparse
 import json
 from datetime import datetime, timezone
 from pathlib import Path
 
+import numpy as np
+
 from repro.configs import get_reduced_config
 from repro.serving.engine import InferenceEngine, ServeConfig
-from repro.serving.load import bursty_stream_for_service, mean_service_s
+from repro.serving.load import bursty_stream
 from repro.serving.scheduler import (
     ContinuousBatchingScheduler,
-    EngineCalibration,
+    FixedCalibration,
     run_static_batches,
 )
 
+# the one shared target-accelerator cost model (seconds)
+STEP_S = 0.004          # masked decode step over the pool
+PREFILL_BASE_S = 0.001  # per-prefill-call overhead (program dispatch)
+PREFILL_TOK_S = 0.001   # per prompt token (compute-bound prefill)
+PROMPT_LENS = (8, 64)   # short interactive + long-context admissions
+NEW_TOKENS = (4, 12)
 
-def run(arch: str = "granite-3-8b", n: int = 48, max_batch: int = 8,
-        seed: int = 0) -> dict:
+
+def run(arch: str = "granite-3-8b", n: int = 96, max_batch: int = 8,
+        chunk: int = 16, seed: int = 0, execute: bool = True) -> dict:
     cfg = get_reduced_config(arch)
-    engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=max_batch, max_len=64))
-    cal = EngineCalibration(engine)
-    t_step = cal.step_s()
-    service = mean_service_s(cal)
-    reqs = bursty_stream_for_service(cal, n, vocab_size=cfg.vocab_size, seed=seed)
+    engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=max_batch, max_len=96))
+    cal = FixedCalibration(step_s=STEP_S, prefill_base_s=PREFILL_BASE_S,
+                           prefill_per_tok_s=PREFILL_TOK_S)
+    service = (PREFILL_BASE_S + PREFILL_TOK_S * float(np.mean(PROMPT_LENS))
+               + float(np.mean(NEW_TOKENS)) * STEP_S)
+    reqs = bursty_stream(n, fast_rate_hz=1.5 / service,
+                         slow_rate_hz=0.02 / service, p_leave_burst=0.05,
+                         seed=seed, vocab_size=cfg.vocab_size,
+                         prompt_lens=PROMPT_LENS, new_tokens=NEW_TOKENS)
 
-    cont = ContinuousBatchingScheduler(engine, policy="adaptive",
-                                       calibration=cal).run(reqs)
-    stat = run_static_batches(engine, reqs, policy="adaptive", calibration=cal,
-                              flush_s=16 * service)
-    print(f"{arch}: {n} bursty requests, {max_batch}-slot pool, "
-          f"t_step={t_step * 1e3:.2f} ms")
-    print("  " + stat.summary())
-    print("  " + cont.summary())
+    kw = dict(policy="adaptive", execute=execute, calibration=cal)
+    cont = ContinuousBatchingScheduler(engine, **kw).run(reqs)
+    chkd = ContinuousBatchingScheduler(engine, prefill_chunk=chunk, **kw).run(reqs)
+    stat = run_static_batches(engine, reqs, policy="adaptive", execute=execute,
+                              calibration=cal, flush_s=16 * service)
+    print(f"{arch}: {n} bursty long-prompt requests, {max_batch}-slot pool, "
+          f"chunk={chunk}, t_step={STEP_S * 1e3:.1f} ms (fixed cost model)")
+    for rep in (stat, cont, chkd):
+        print("  " + rep.summary())
     gain_ipj = cont.items_per_joule / stat.items_per_joule
     gain_p50 = stat.p50_s / cont.p50_s
     gain_p99 = stat.p99_s / cont.p99_s
+    chunk_p99 = cont.p99_s / chkd.p99_s
     print(f"  continuous vs static: {gain_ipj:.2f}x items/J, "
           f"{gain_p50:.2f}x lower p50, {gain_p99:.2f}x lower p99")
+    print(f"  chunked vs blocking admission: {chunk_p99:.2f}x lower p99 "
+          f"({chkd.chunks} chunks)")
     return {
         "continuous_items_per_j": cont.items_per_joule,
         "static_items_per_j": stat.items_per_joule,
@@ -61,8 +87,14 @@ def run(arch: str = "granite-3-8b", n: int = 48, max_batch: int = 8,
         "continuous_p99_ms": cont.p99_s * 1e3,
         "static_p99_ms": stat.p99_s * 1e3,
         "p99_speedup": gain_p99,
+        "chunked_items_per_j": chkd.items_per_joule,
+        "chunked_p50_ms": chkd.p50_s * 1e3,
+        "chunked_p99_ms": chkd.p99_s * 1e3,
+        "chunked_p99_speedup": chunk_p99,
+        "chunked_chunks": chkd.chunks,
         "continuous_reloads": cont.reloads,
         "static_reloads": stat.reloads,
+        "chunked_reloads": chkd.reloads,
     }
 
 
@@ -72,13 +104,18 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prompt tokens per chunked-prefill tick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-execute", action="store_true",
+                    help="virtual pools only (ledger unchanged, no real tokens)")
     ap.add_argument("--out", default=".", help="directory for the BENCH_*.json artifact")
     args = ap.parse_args(argv)
 
-    n = args.n or (48 if args.quick else 96)
+    n = args.n or (56 if args.quick else 96)
     batch = args.batch or 8
-    derived = run(arch=args.arch, n=n, max_batch=batch, seed=args.seed)
+    derived = run(arch=args.arch, n=n, max_batch=batch, chunk=args.chunk,
+                  seed=args.seed, execute=not args.no_execute)
 
     stamp = datetime.now(timezone.utc).strftime("%Y%m%d-%H%M%S")
     out_dir = Path(args.out)
@@ -91,12 +128,15 @@ def main(argv=None) -> int:
             "arch": args.arch,
             "n_requests": n,
             "max_batch": batch,
+            "prefill_chunk": args.chunk,
             "derived": {k: float(v) for k, v in derived.items()},
         }],
     }, indent=1, sort_keys=True))
     print(f"\nwrote {artifact}")
-    ok = derived["items_per_j_gain"] > 1.0 and derived["p50_speedup"] > 1.0
-    print("continuous beats static on items/J and p50:", "yes" if ok else "NO")
+    ok = (derived["items_per_j_gain"] > 1.0 and derived["p50_speedup"] > 1.0
+          and derived["chunked_p99_speedup"] >= 1.0)
+    print("continuous beats static (items/J, p50) and chunked beats blocking "
+          "admission (p99):", "yes" if ok else "NO")
     return 0 if ok else 1
 
 

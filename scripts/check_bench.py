@@ -1,0 +1,116 @@
+"""BENCH regression gate: parse BENCH_*.json artifacts and fail on regressed
+ratios.
+
+Reads the serve and LSTM benchmark artifacts (as produced in-workflow by
+``benchmarks/serve_bench.py`` and ``benchmarks/run.py --only paper_lstm``),
+picks the newest artifact per result name, and enforces the repo's headline
+claims as floors:
+
+  serve_continuous_batching (DETERMINISTIC — fixed accelerator cost model):
+    items_per_j_gain      continuous items/J vs static        >= 1.0
+    p50_speedup           continuous p50 vs static            >= 1.0
+    chunked_p99_speedup   chunked-admission p99 vs blocking   >= 1.0
+
+  paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
+  so the floor is a catastrophic-regression guard, not the real margin; the
+  committed full-run artifacts hold the true speedups):
+    tpu_seq_speedup       seq-resident vs per-step scan       >= 1.0
+    tpu_q8_speedup        int8-resident vs f32 seq-resident   >= 1.0
+    tpu_stack_speedup     layer-fused stack vs sequential     >= 1.0
+
+Each check passes when ratio >= floor * (1 - tol). Tolerances:
+``--tol`` for the deterministic serve ratios (default 0.05) and
+``--tol-lstm`` for the timing-based LSTM ratios (default 0.5).
+
+Usage:
+  python scripts/check_bench.py serve-bench-artifacts lstm-bench-artifacts
+  python scripts/check_bench.py            # newest artifacts in the repo root
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SERVE_CHECKS = (  # (derived key, floor)
+    ("items_per_j_gain", 1.0),
+    ("p50_speedup", 1.0),
+    ("chunked_p99_speedup", 1.0),
+)
+LSTM_CHECKS = (
+    ("tpu_seq_speedup", 1.0),
+    ("tpu_q8_speedup", 1.0),
+    ("tpu_stack_speedup", 1.0),
+)
+CHECKS = {
+    "serve_continuous_batching": ("tol", SERVE_CHECKS),
+    "paper_lstm_C1_C2": ("tol_lstm", LSTM_CHECKS),
+}
+
+
+def collect(paths: list[Path]) -> dict[str, tuple[str, dict]]:
+    """name -> (artifact path, derived) from the NEWEST artifact containing
+    each gated result name (newest by timestamp_utc, then mtime)."""
+    artifacts = []
+    for p in paths:
+        if p.is_dir():
+            artifacts.extend(sorted(p.glob("BENCH_*.json")))
+        elif p.exists():
+            artifacts.append(p)
+        else:
+            sys.exit(f"check_bench: no such path: {p}")
+    newest: dict[str, tuple[tuple, str, dict]] = {}
+    for art in artifacts:
+        try:
+            doc = json.loads(art.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            sys.exit(f"check_bench: cannot parse {art}: {e}")
+        key = (doc.get("timestamp_utc", ""), art.stat().st_mtime)
+        for res in doc.get("results", []):
+            name = res.get("name")
+            if name in CHECKS and (name not in newest or key > newest[name][0]):
+                newest[name] = (key, str(art), res.get("derived", {}))
+    return {name: (path, derived) for name, (_, path, derived) in newest.items()}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["."],
+                    help="artifact files or directories to scan (default: .)")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="relative tolerance for the deterministic serve ratios")
+    ap.add_argument("--tol-lstm", type=float, default=0.5,
+                    help="relative tolerance for interpret-mode LSTM timing ratios")
+    args = ap.parse_args(argv)
+
+    found = collect([Path(p) for p in (args.paths or ["."])])
+    failures = 0
+    for name, (tol_name, checks) in CHECKS.items():
+        if name not in found:
+            print(f"FAIL {name}: no BENCH artifact with this result found")
+            failures += 1
+            continue
+        path, derived = found[name]
+        tol = getattr(args, tol_name)
+        print(f"{name} ({path}, tol={tol:g}):")
+        for key, floor in checks:
+            if key not in derived:
+                print(f"  FAIL {key}: missing from artifact")
+                failures += 1
+                continue
+            val = float(derived[key])
+            need = floor * (1.0 - tol)
+            ok = val >= need
+            print(f"  {'ok  ' if ok else 'FAIL'} {key} = {val:.3f} "
+                  f"(floor {floor:g}, need >= {need:.3f})")
+            failures += 0 if ok else 1
+    if failures:
+        print(f"\ncheck_bench: {failures} regression(s) — failing")
+        return 1
+    print("\ncheck_bench: all BENCH ratios within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,14 +2,18 @@
 (RQ2 on TPU), plus the legacy offline strategy comparison.
 
 Modes:
-  continuous  request-level scheduler: admission into free slots mid-decode,
-              one jitted masked decode step per tick, online streaming-τ
-              duty cycling between queue drains (the default)
-  compare     continuous vs the static-batch baseline on the same stream
+  continuous  request-level scheduler: admission into free slots mid-decode
+              with BLOCKING prefill, one jitted masked decode step per tick,
+              online streaming-τ duty cycling between queue drains (default)
+  chunked     continuous scheduling with CHUNKED admission: FIFO same-length
+              groups advance --prefill-chunk prompt tokens per tick between
+              decode steps, so a long prompt never freezes the pool
+  compare     static-batch baseline vs continuous vs chunked, same stream
   strategies  the offline gap-trace strategy comparison (WorkloadAwareServer)
 
 Examples:
   python -m repro.launch.serve --arch granite-3-8b --load bursty --n 60
+  python -m repro.launch.serve --arch granite-3-8b --mode chunked --prefill-chunk 8
   python -m repro.launch.serve --arch granite-3-8b --mode compare --load poisson
   python -m repro.launch.serve --arch granite-3-8b --mode strategies --trace bursty
 """
@@ -54,7 +58,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--mode", default="continuous",
-                    choices=("continuous", "compare", "strategies"))
+                    choices=("continuous", "chunked", "compare", "strategies"))
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunked-prefill tick; admission "
+                         "batches same-length arrivals into one prefill call "
+                         "(modes: chunked, compare)")
     ap.add_argument("--load", default="bursty",
                     choices=("poisson", "bursty", "diurnal"))
     ap.add_argument("--policy", default="adaptive",
@@ -101,8 +109,9 @@ def main(argv=None) -> int:
     reqs = _make_stream(args, cfg, cal)
     print(f"{args.arch}: {args.load} stream, {args.n} requests, "
           f"t_step={cal.step_s() * 1e3:.2f} ms, pool={args.batch}")
-    sched = ContinuousBatchingScheduler(engine, policy=args.policy,
-                                        chips=args.chips, calibration=cal)
+    sched = ContinuousBatchingScheduler(
+        engine, policy=args.policy, chips=args.chips, calibration=cal,
+        prefill_chunk=args.prefill_chunk if args.mode == "chunked" else None)
     rep = sched.run(reqs)
     print("  " + rep.summary())
     tau = sched.policy.tau
@@ -110,13 +119,18 @@ def main(argv=None) -> int:
         print(f"  online tau after run: {tau:.3f} s "
               f"(refits: {getattr(sched.policy, 'refits', 0)})")
     if args.mode == "compare":
+        chkd = ContinuousBatchingScheduler(
+            engine, policy=args.policy, chips=args.chips, calibration=cal,
+            prefill_chunk=args.prefill_chunk).run(reqs)
+        print("  " + chkd.summary())
         stat = run_static_batches(engine, reqs, policy=args.policy,
                                   chips=args.chips, calibration=cal,
                                   flush_s=16 * mean_service_s(cal))
         print("  " + stat.summary())
         print(f"  continuous/static items-per-J: "
               f"{rep.items_per_joule / stat.items_per_joule:.2f}x, "
-              f"p50 speedup: {stat.p50_s / rep.p50_s:.2f}x")
+              f"p50 speedup: {stat.p50_s / rep.p50_s:.2f}x, "
+              f"chunked/blocking p99 speedup: {rep.p99_s / chkd.p99_s:.2f}x")
     return 0
 
 

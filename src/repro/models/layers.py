@@ -266,6 +266,52 @@ def write_cache(cache, new, pos, cfg: ArchConfig, axis: int = 1):
     return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=axis)
 
 
+def write_cache_span(cache, new, pos, axis: int = 1):
+    """Write a length-T slice starting at ``pos`` along ``axis``.
+
+    The chunked-prefill path always uses dynamic_update_slice: chunk writes
+    are a host-driven serving flow over a pool-resident cache, not the
+    TP-sharded decode step that needs the onehot variant."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), pos, axis=axis
+    )
+
+
+def attention_chunk(q, k_cache, v_cache, pos) -> jax.Array:
+    """Chunk attention: q: (B,T,H,D) queries at positions pos..pos+T-1
+    against caches (B,Smax,KV,D) already updated through pos+T-1.
+
+    Each query attends causally over cache[0..pos+i]; rows past the written
+    prefix are dead data and masked out. This is ``attention_decode``
+    generalized from one query to a chunk of T."""
+    b, t, h, d = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32)
+    k = _repeat_kv(k_cache, g)
+    v = _repeat_kv(v_cache, g)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32)) / jnp.sqrt(d)
+    qpos = pos + jnp.arange(t)
+    valid = jnp.arange(k_cache.shape[1])[None, :] <= qpos[:, None]  # (T, Smax)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gqa_chunk_apply(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *, rope: bool = True):
+    """Chunked-prefill attention: T prompt tokens appended at ``pos``.
+
+    x: (B,T,D). Returns (out, k_cache, v_cache) with the chunk's K/V written
+    into the cache span [pos, pos+T)."""
+    positions = (pos + jnp.arange(x.shape[1]))[None, :]
+    q, k_new, v_new = gqa_project_qkv(params, x, cfg, positions, rope=rope)
+    k_cache = write_cache_span(cache_k, k_new, pos)
+    v_cache = write_cache_span(cache_v, v_new, pos)
+    out = attention_chunk(q, k_cache, v_cache, pos)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), k_cache, v_cache
+
+
 def gqa_decode_apply(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *, rope: bool = True):
     """One-token decode. x: (B,1,D). Returns (out, new_k_slice, new_v_slice).
 
@@ -382,6 +428,36 @@ def mla_decode_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
     p = constrain(jax.nn.softmax(s, axis=-1), ("batch", None, None, "kv_seq"))
     o_c = jnp.einsum("bhqk,bkr->bqhr", p, cache_c.astype(jnp.float32)).astype(x.dtype)
     o_c = constrain(o_c, ("batch", None, None, None))
+    out = jnp.einsum("bqhr,rhe->bqhe", o_c, params["wv_b"])
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, cache_c, cache_krope
+
+
+def mla_chunk_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
+    """Absorbed-MLA chunk: ``mla_decode_apply`` generalized to T queries.
+
+    The chunk's compressed (c, k_rope) rows are written at [pos, pos+T) and
+    every query attends causally over the compressed cache — same absorbed
+    dataflow the decode step uses, so chunked prefill and decode share one
+    numerical path."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    positions = (pos + jnp.arange(t))[None, :]
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)  # (B,T,H,*)
+    c_new, krope_new = _mla_ckv(params, x, cfg, positions)  # (B,T,r), (B,T,rd)
+    cache_c = write_cache_span(cache_c, c_new, pos)
+    cache_krope = write_cache_span(cache_krope, krope_new, pos)
+    q_abs = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["wk_b"])
+    s = jnp.einsum("bqhr,bkr->bhqk", q_abs.astype(jnp.float32), cache_c.astype(jnp.float32))
+    s = s + jnp.einsum(
+        "bqhe,bke->bhqk", q_rope.astype(jnp.float32), cache_krope.astype(jnp.float32)
+    )
+    s = s / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    qpos = pos + jnp.arange(t)
+    valid = jnp.arange(cache_c.shape[1])[None, :] <= qpos[:, None]
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhqk,bkr->bqhr", p, cache_c.astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bqhr,rhe->bqhe", o_c, params["wv_b"])
     out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
     return out, cache_c, cache_krope

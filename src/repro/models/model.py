@@ -185,10 +185,7 @@ def _stack_slice(stack, start, length):
 def forward(params, tokens, cfg: ArchConfig, frontend_embeds=None):
     f = cfg.family
     if f == "audio":
-        enc = frontend_embeds.astype(cfg.dtype)
-        enc = enc + T.sinusoid_positions(enc.shape[1], cfg.d_model).astype(enc.dtype)[None]
-        enc, _ = run_stack(params["enc_blocks"], enc, partial(T.enc_block_apply, cfg=cfg), cfg)
-        enc = T.apply_norm(cfg, params["enc_norm"], enc)
+        enc = _encode_audio(params, cfg, frontend_embeds)
         x = _embed_tokens(params, tokens, cfg)
         x, aux = run_stack(
             params["blocks"], x, lambda p, x: T.dec_block_apply(p, x, enc, cfg), cfg
@@ -288,14 +285,20 @@ def train_loss(params, batch, cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 # Prefill → (last-token logits, cache)
 # ---------------------------------------------------------------------------
+def _encode_audio(params, cfg: ArchConfig, frontend_embeds):
+    """The audio encoder pass shared by prefill and the chunked-prefill
+    cross-cache builder (one definition keeps both token-identical)."""
+    enc = frontend_embeds.astype(cfg.dtype)
+    enc = enc + T.sinusoid_positions(enc.shape[1], cfg.d_model).astype(enc.dtype)[None]
+    enc, _ = run_stack(params["enc_blocks"], enc, partial(T.enc_block_apply, cfg=cfg), cfg)
+    return T.apply_norm(cfg, params["enc_norm"], enc)
+
+
 def prefill(params, tokens, cfg: ArchConfig, frontend_embeds=None):
     f = cfg.family
     cache: dict[str, Any] = {}
     if f == "audio":
-        enc = frontend_embeds.astype(cfg.dtype)
-        enc = enc + T.sinusoid_positions(enc.shape[1], cfg.d_model).astype(enc.dtype)[None]
-        enc, _ = run_stack(params["enc_blocks"], enc, partial(T.enc_block_apply, cfg=cfg), cfg)
-        enc = T.apply_norm(cfg, params["enc_norm"], enc)
+        enc = _encode_audio(params, cfg, frontend_embeds)
         x = _embed_tokens(params, tokens, cfg)
         x, (k, v, ck, cv) = run_stack_prefill(
             params["blocks"], x, lambda p, x: T.dec_block_prefill(p, x, enc, cfg), cfg
@@ -459,6 +462,116 @@ def decode_step(params, cache, token, pos, cfg: ArchConfig):
         raise ValueError(f)
     hidden = T.apply_norm(cfg, params["final_norm"], x)
     logits = unembed_apply(params["embed"], hidden, cfg)[:, 0]
+    return _mask_pad_logits(logits, cfg).astype(jnp.float32), cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill → (last-chunk-token logits, cache)
+# ---------------------------------------------------------------------------
+def encoder_cross_cache(params, cfg: ArchConfig, frontend_embeds):
+    """Run the audio encoder once and emit per-layer cross K/V stacks.
+
+    Returns (cross_k, cross_v): (L, B, encoder_seq, KV, hd) — the static
+    decoder-side cross caches that chunked prefill and decode consume."""
+    enc = _encode_audio(params, cfg, frontend_embeds)
+    return jax.vmap(lambda p: T._cross_kv(p["cross_attn"], enc, cfg))(params["blocks"])
+
+
+def prefill_chunk(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=None):
+    """Process one chunk of T prompt tokens against a full-capacity decode
+    cache at positions [pos, pos+T).
+
+    tokens: (B, T) int32; pos: scalar int32 — the first cache position the
+    chunk writes. ``cache`` uses the decode layout (``cache_defs`` capacity,
+    zero-initialized; audio additionally needs ``encoder_cross_cache`` rows
+    filled up-front). Successive chunks compose to the blocking ``prefill``
+    recurrence: attention families mask dead cache rows past the written
+    prefix, SSM families carry conv tail + state between chunks. For VLM,
+    ``frontend_embeds`` must be padded to cache capacity on the seq axis so
+    every chunk can slice it at ``pos``. Returns (last-position logits,
+    cache) — after the final chunk the logits match ``prefill``'s up to
+    chunk-boundary float reassociation."""
+    f = cfg.family
+    x = embed_apply(params["embed"], tokens, cfg)
+    if f == "vlm" and frontend_embeds is not None:
+        fs = cfg.frontend_seq
+        t = tokens.shape[1]
+        fe = jax.lax.dynamic_slice_in_dim(frontend_embeds, pos, t, axis=1)
+        sel = (pos + jnp.arange(t))[None, :, None] < fs
+        x = jnp.where(sel, fe.astype(x.dtype), x)
+    x = constrain(x, ("batch", None, None))
+    if f == "audio":
+        pe = T.sinusoid_positions(tokens.shape[1], cfg.d_model, offset=pos).astype(x.dtype)
+        x = x + pe[None]
+        x, (k, v, ck, cv) = run_stack_decode(
+            params["blocks"],
+            (cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+            x, partial(T.dec_block_chunk, cfg=cfg), pos, cfg,
+        )
+        cache = {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+    elif f in ("dense", "vlm"):
+        x, (k, v) = run_stack_decode(
+            params["blocks"], (cache["k"], cache["v"]), x,
+            partial(T.dense_block_chunk, cfg=cfg), pos, cfg,
+        )
+        cache = {"k": k, "v": v}
+    elif f == "moe" and cfg.mla is None:
+        x, (k, v) = run_stack_decode(
+            params["blocks"], (cache["k"], cache["v"]), x,
+            partial(T.moe_block_chunk, cfg=cfg), pos, cfg,
+        )
+        cache = {"k": k, "v": v}
+    elif f == "moe":  # deepseek — absorbed attention over the compressed cache
+        kd = cfg.first_k_dense
+        c, krope = cache["c"], cache["krope"]
+        x, (c1, r1) = run_stack_decode(
+            params["dense_blocks"], (c[:kd], krope[:kd]), x,
+            partial(T.mla_dense_block_chunk, cfg=cfg), pos, cfg,
+        )
+        x, (c2, r2) = run_stack_decode(
+            params["blocks"], (c[kd:], krope[kd:]), x,
+            partial(T.mla_moe_block_chunk, cfg=cfg), pos, cfg,
+        )
+        cache = {
+            "c": jnp.concatenate([c1, c2], axis=0),
+            "krope": jnp.concatenate([r1, r2], axis=0),
+        }
+    elif f == "ssm":
+        x, (conv, state) = run_stack_decode(
+            params["blocks"], (cache["conv"], cache["state"]), x,
+            partial(T.ssm_block_chunk, cfg=cfg), pos, cfg,
+        )
+        cache = {"conv": conv, "state": state}
+    elif f == "hybrid":
+        x0 = x
+        convs, states, sks, svs = [], [], [], []
+        for i, (start, length) in enumerate(_hybrid_segments(cfg)):
+            x, sk, sv = T.shared_attn_chunk(
+                params["shared"], x, x0,
+                cache["shared_k"][i], cache["shared_v"][i], pos, cfg,
+            )
+            sks.append(sk)
+            svs.append(sv)
+            seg = _stack_slice(params["blocks"], start, length)
+            segc = (
+                jax.lax.slice_in_dim(cache["conv"], start, start + length, axis=0),
+                jax.lax.slice_in_dim(cache["state"], start, start + length, axis=0),
+            )
+            x, (conv, state) = run_stack_decode(
+                seg, segc, x, partial(T.ssm_block_chunk, cfg=cfg), pos, cfg
+            )
+            convs.append(conv)
+            states.append(state)
+        cache = {
+            "conv": jnp.concatenate(convs, axis=0),
+            "state": jnp.concatenate(states, axis=0),
+            "shared_k": jnp.stack(sks),
+            "shared_v": jnp.stack(svs),
+        }
+    else:
+        raise ValueError(f)
+    hidden = T.apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(params["embed"], hidden[:, -1:], cfg)[:, 0]
     return _mask_pad_logits(logits, cfg).astype(jnp.float32), cache
 
 

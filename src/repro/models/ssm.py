@@ -75,6 +75,21 @@ def _causal_conv(x, w, b):
     return jax.nn.silu(out).astype(x.dtype)
 
 
+def _conv_chunk(tail, raw, w, b):
+    """Causal depthwise conv over a T-token chunk with a carried raw tail.
+
+    tail: (B, W-1, C) — the raw inputs immediately preceding the chunk (zeros
+    for the first chunk, matching ``_causal_conv``'s left zero-padding).
+    raw: (B, T, C). Returns (silu(conv), new_tail)."""
+    width = w.shape[0]
+    xp = jnp.concatenate([tail.astype(raw.dtype), raw], axis=1)  # (B, W-1+T, C)
+    out = jnp.zeros_like(raw, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i : i + raw.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(raw.dtype), xp[:, -(width - 1) :, :]
+
+
 def _conv_step(conv_state, x_new, w, b):
     """Incremental conv. conv_state: (B, W-1, C); x_new: (B, 1, C)."""
     window = jnp.concatenate([conv_state.astype(x_new.dtype), x_new], axis=1)  # (B, W, C)
@@ -236,6 +251,45 @@ def mamba_prefill_apply(params, x, cfg: ArchConfig):
     y = y.reshape(b, sl, nh * hd).astype(x.dtype)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
     return jnp.einsum("bsi,id->bsd", y, params["wo"]), tail, h_final
+
+
+def mamba_chunk_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
+    """Chunked prefill: T tokens with carried conv tail + SSM state.
+
+    x: (B, T, D). The conv consumes the previous W-1 *raw* projected values
+    (``conv_state``, same layout the decode step maintains) and the SSD scan
+    starts from ``ssm_state`` — so successive chunks compose to the same
+    recurrence the full-sequence ``mamba_prefill_apply`` computes.
+    Returns (out, new_conv_state, new_ssm_state)."""
+    s = cfg.ssm
+    hd, st = s.head_dim, s.state_size
+    nh = s.num_heads(cfg.d_model)
+    di = s.d_inner(cfg.d_model)
+    z, xs_raw, B_raw, C_raw, dt = _project(params, x, cfg)
+
+    cs_x = conv_state[:, :, :di]
+    cs_B = conv_state[:, :, di : di + st]
+    cs_C = conv_state[:, :, di + st :]
+    xs, cs_x = _conv_chunk(cs_x, xs_raw, params["conv_x"], params["conv_x_b"])
+    Bm, cs_B = _conv_chunk(cs_B, B_raw, params["conv_B"], params["conv_B_b"])
+    Cm, cs_C = _conv_chunk(cs_C, C_raw, params["conv_C"], params["conv_C_b"])
+    new_conv = jnp.concatenate(
+        [cs_x.astype(conv_state.dtype), cs_B.astype(conv_state.dtype), cs_C.astype(conv_state.dtype)],
+        axis=-1,
+    )
+
+    b, sl, _ = x.shape
+    xh = xs.reshape(b, sl, nh, hd).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(
+        xh, dtf, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), s.chunk_size,
+        h0=ssm_state.astype(jnp.float32),
+    )
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, sl, nh * hd).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, params["wo"]), new_conv, h_final.astype(ssm_state.dtype)
 
 
 def mamba_decode_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):

@@ -26,10 +26,12 @@ from repro.models import ssm as ssm_mod
 from repro.models.layers import (
     apply_rope,
     attention_decode,
+    gqa_chunk_apply,
     gqa_cross_apply,
     gqa_decode_apply,
     gqa_defs,
     gqa_project_qkv,
+    mla_chunk_apply,
     layernorm,
     layernorm_defs,
     mla_apply,
@@ -98,6 +100,17 @@ def dense_block_prefill(p, x, cfg: ArchConfig):
     return x, (k, v)
 
 
+def dense_block_chunk(p, x, cache, pos, cfg: ArchConfig):
+    """Chunked-prefill body: T prompt tokens appended at ``pos``."""
+    k_cache, v_cache = cache
+    a, k_cache, v_cache = gqa_chunk_apply(
+        p["attn"], apply_norm(cfg, p["ln1"], x), k_cache, v_cache, pos, cfg
+    )
+    x = x + a
+    x = x + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], x), cfg)
+    return x, (k_cache, v_cache)
+
+
 def dense_block_decode(p, x, cache, pos, cfg: ArchConfig):
     k_cache, v_cache = cache
     a, k_cache, v_cache = gqa_decode_apply(
@@ -131,6 +144,16 @@ def moe_block_prefill(p, x, cfg: ArchConfig):
     x = x + a
     y, _ = moe_apply(p["moe"], apply_norm(cfg, p["ln2"], x), cfg)
     return x + y, (k, v)
+
+
+def moe_block_chunk(p, x, cache, pos, cfg: ArchConfig):
+    k_cache, v_cache = cache
+    a, k_cache, v_cache = gqa_chunk_apply(
+        p["attn"], apply_norm(cfg, p["ln1"], x), k_cache, v_cache, pos, cfg
+    )
+    x = x + a
+    y, _ = moe_apply(p["moe"], apply_norm(cfg, p["ln2"], x), cfg)
+    return x + y, (k_cache, v_cache)
 
 
 def moe_block_decode(p, x, cache, pos, cfg: ArchConfig):
@@ -206,6 +229,22 @@ def mla_moe_block_prefill(p, x, cfg: ArchConfig):
     return x + y, cache
 
 
+def mla_dense_block_chunk(p, x, cache, pos, cfg: ArchConfig):
+    c, krope = cache
+    a, c, krope = mla_chunk_apply(p["attn"], apply_norm(cfg, p["ln1"], x), c, krope, pos, cfg)
+    x = x + a
+    x = x + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], x), cfg)
+    return x, (c, krope)
+
+
+def mla_moe_block_chunk(p, x, cache, pos, cfg: ArchConfig):
+    c, krope = cache
+    a, c, krope = mla_chunk_apply(p["attn"], apply_norm(cfg, p["ln1"], x), c, krope, pos, cfg)
+    x = x + a
+    y, _ = moe_apply(p["moe"], apply_norm(cfg, p["ln2"], x), cfg)
+    return x + y, (c, krope)
+
+
 def mla_dense_block_decode(p, x, cache, pos, cfg: ArchConfig):
     c, krope = cache
     a, c, krope = mla_decode_apply(p["attn"], apply_norm(cfg, p["ln1"], x), c, krope, pos, cfg)
@@ -231,6 +270,15 @@ def ssm_block_defs(cfg: ArchConfig) -> dict:
 
 def ssm_block_apply(p, x, cfg: ArchConfig):
     return x + ssm_mod.mamba_apply(p["mamba"], apply_norm(cfg, p["ln"], x), cfg), ZERO
+
+
+def ssm_block_chunk(p, x, cache, pos, cfg: ArchConfig):
+    """Chunk body (``pos`` unused — the SSM carries state, not positions)."""
+    conv, state = cache
+    y, conv, state = ssm_mod.mamba_chunk_apply(
+        p["mamba"], apply_norm(cfg, p["ln"], x), conv, state, cfg
+    )
+    return x + y, (conv, state)
 
 
 def ssm_block_decode(p, x, cache, pos, cfg: ArchConfig):
@@ -259,6 +307,16 @@ def shared_attn_apply(p, x, x0, cfg: ArchConfig):
     y = inp + gqa_full(p["attn"], apply_norm(cfg, p["ln1"], inp), cfg, causal=True, rope=True)[0]
     y = y + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], y), cfg)
     return x + jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+def shared_attn_chunk(p, x, x0, k_cache, v_cache, pos, cfg: ArchConfig):
+    inp = jnp.einsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
+    a, k_cache, v_cache = gqa_chunk_apply(
+        p["attn"], apply_norm(cfg, p["ln1"], inp), k_cache, v_cache, pos, cfg
+    )
+    y = inp + a
+    y = y + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], y), cfg)
+    return x + jnp.einsum("bse,ed->bsd", y, p["w_out"]), k_cache, v_cache
 
 
 def shared_attn_decode(p, x, x0, k_cache, v_cache, pos, cfg: ArchConfig):
@@ -324,6 +382,19 @@ def dec_block_prefill(p, x, enc, cfg: ArchConfig):
     x = x + gqa_cross_apply(p["cross_attn"], apply_norm(cfg, p["ln_x"], x), (ck, cv), cfg)
     x = x + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], x), cfg)
     return x, (k, v, ck, cv)
+
+
+def dec_block_chunk(p, x, cache, pos, cfg: ArchConfig):
+    """Decoder chunk: causal self-attn over the cache + cross-attn against
+    the (static, precomputed) encoder K/V."""
+    k_cache, v_cache, ck, cv = cache
+    a, k_cache, v_cache = gqa_chunk_apply(
+        p["self_attn"], apply_norm(cfg, p["ln1"], x), k_cache, v_cache, pos, cfg, rope=False
+    )
+    x = x + a
+    x = x + gqa_cross_apply(p["cross_attn"], apply_norm(cfg, p["ln_x"], x), (ck, cv), cfg)
+    x = x + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], x), cfg)
+    return x, (k_cache, v_cache, ck, cv)
 
 
 def dec_block_decode(p, x, cache, pos, cfg: ArchConfig):

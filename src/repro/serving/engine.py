@@ -29,7 +29,13 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.energy import DEFAULT_CHIP, TPUChip
 from repro.core.workload import AccelProfile, break_even_tau, learn_tau, simulate
-from repro.models.model import decode_step, init_model, prefill
+from repro.models.model import (
+    decode_step,
+    encoder_cross_cache,
+    init_model,
+    prefill,
+    prefill_chunk,
+)
 from repro.models.params import init_params
 from repro.serving.kv_cache import cache_defs
 from repro.serving.slots import SlotPool, grow_cache
@@ -77,6 +83,18 @@ class InferenceEngine:
             donate_argnums=(1,),
         )
         self._masked_decode = jax.jit(self._masked_decode_impl, donate_argnums=(1,))
+        # chunked prefill: T prompt tokens appended to a full-capacity cache
+        # at a traced offset — one compile per (batch, chunk-length) signature
+        self._chunk = jax.jit(
+            lambda p, cache, toks, pos, fe: prefill_chunk(
+                p, cache, toks, pos, cfg, frontend_embeds=fe
+            ),
+            donate_argnums=(1,),
+        )
+        self._cross_cache = jax.jit(
+            lambda p, fe: encoder_cross_cache(p, cfg, fe)
+        )
+        self._chunk_probe_fn = None  # non-donating twin of _chunk (calibration)
         self._fresh_cache = jax.jit(
             lambda: init_params(
                 cache_defs(cfg, batch=self.sc.max_batch, max_len=self.sc.max_len),
@@ -145,12 +163,15 @@ class InferenceEngine:
         """One decode step over the whole pool. Returns next greedy token per
         slot, (max_batch,) int32 — entries for inactive slots are garbage.
 
-        Host-side slot bookkeeping (pos/emitted advancement, retirement) is
-        the scheduler's job; this only advances the device state.
+        Slots whose chunked prefill is still in flight (``admitting``) are
+        masked out along with free slots: their cache rows are dead until
+        ``activate`` lands the prefilled state. Host-side slot bookkeeping
+        (pos/emitted advancement, retirement) is the scheduler's job; this
+        only advances the device state.
         """
         nxt, pool.cache = self._masked_decode(
             self.params, pool.cache, jnp.asarray(pool.tok),
-            jnp.asarray(pool.positions()), jnp.asarray(pool.active),
+            jnp.asarray(pool.positions()), jnp.asarray(pool.decode_mask()),
         )
         return np.asarray(nxt)
 
@@ -173,6 +194,122 @@ class InferenceEngine:
             return nxt, jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
 
         return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(cache, tok, pos)
+
+    # -- chunked prefill ------------------------------------------------------
+    def begin_chunked_prefill(self, pool: SlotPool, slots: list[int],
+                              prompts: np.ndarray, *, rids: list[int],
+                              budgets: list[int]) -> "ChunkedPrefillState":
+        """Reserve ``slots`` for a same-length admission group and build the
+        group's fresh full-capacity cache (batch = group size).
+
+        The group prefills OUTSIDE the pool — the pool's masked decode keeps
+        serving the decoding slots between chunks — and ``finish_chunked_
+        prefill`` lands each row into its reserved slot at the end."""
+        prompts = np.asarray(prompts, np.int32)
+        k, s0 = prompts.shape
+        assert len(slots) == len(rids) == len(budgets) == k
+        # validated before any reservation below; the scheduler additionally
+        # validates every request up-front in run(), so its own pre-reserved
+        # slots can never be stranded by this raise
+        for rid, budget in zip(rids, budgets):
+            if s0 + budget > self.sc.max_len:
+                raise ValueError(f"request {rid}: prompt {s0} + budget {budget} "
+                                 f"exceeds max_len {self.sc.max_len}")
+        for slot, rid in zip(slots, rids):
+            if not pool.admitting[slot]:  # the scheduler may have reserved already
+                pool.reserve(slot, rid=rid)
+        cache = init_params(
+            cache_defs(self.cfg, batch=k, max_len=self.sc.max_len),
+            jax.random.PRNGKey(0),
+        )
+        if self.cfg.family == "audio":
+            ck, cv = self._cross_cache(self.params, self._frontend_stub(k))
+            cache = dict(cache, cross_k=ck.astype(cache["cross_k"].dtype),
+                         cross_v=cv.astype(cache["cross_v"].dtype))
+        return ChunkedPrefillState(prompts=prompts, rids=list(rids),
+                                   budgets=list(budgets), slots=list(slots),
+                                   cache=cache,
+                                   frontend=self._chunk_frontend(k))
+
+    def _chunk_frontend(self, batch: int):
+        """VLM frontend stub padded to cache capacity on the seq axis, so
+        every chunk can slice it at its offset (built once per group)."""
+        if self.cfg.family != "vlm":
+            return None
+        return jnp.zeros((batch, self.sc.max_len, self.cfg.d_model), self.cfg.dtype)
+
+    def chunk_step_probe(self, batch: int, chunk_tokens: int):
+        """Zero-arg callable running ONE representative chunked-prefill step
+        (zeros chunk at pos 0 against a fresh full-capacity cache) for
+        calibration timing. Uses a non-donating twin of the chunk jit so the
+        probe cache can be reused across timing repeats; the step's cost is
+        position-independent (attention always spans the whole cache
+        capacity, dead rows are masked, not skipped)."""
+        if self._chunk_probe_fn is None:
+            cfg = self.cfg
+            self._chunk_probe_fn = jax.jit(
+                lambda p, cache, toks, pos, fe: prefill_chunk(
+                    p, cache, toks, pos, cfg, frontend_embeds=fe
+                )
+            )
+        cache = init_params(
+            cache_defs(self.cfg, batch=batch, max_len=self.sc.max_len),
+            jax.random.PRNGKey(0),
+        )
+        toks = jnp.zeros((batch, chunk_tokens), jnp.int32)
+        fe = self._chunk_frontend(batch)
+        return lambda: self._chunk_probe_fn(self.params, cache, toks,
+                                            jnp.int32(0), fe)[0]
+
+    def chunked_prefill_step(self, st: "ChunkedPrefillState",
+                             chunk_tokens: int) -> int:
+        """Advance the admitting group by one chunk of ≤ ``chunk_tokens``
+        prompt tokens. Returns the number of tokens processed; after the
+        final chunk ``st.first`` holds each request's first emitted token."""
+        assert not st.done
+        t = min(chunk_tokens, st.s0 - st.pos)
+        toks = jnp.asarray(st.prompts[:, st.pos : st.pos + t])
+        logits, st.cache = self._chunk(self.params, st.cache, toks,
+                                       jnp.int32(st.pos), st.frontend)
+        st.pos += t
+        if st.done:
+            st.first = np.asarray(
+                jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1), np.int32
+            )
+        return t
+
+    def finish_chunked_prefill(self, pool: SlotPool,
+                               st: "ChunkedPrefillState") -> np.ndarray:
+        """Land each prefilled row into its reserved slot (admitting →
+        decoding) and return the group's first emitted tokens."""
+        assert st.done and st.first is not None
+        for j, slot in enumerate(st.slots):
+            row = jax.tree.map(lambda t: t[:, j : j + 1], st.cache)
+            pool.activate(slot, row, rid=st.rids[j], pos=st.s0,
+                          budget=st.budgets[j], first_tok=int(st.first[j]))
+        return st.first
+
+
+@dataclasses.dataclass
+class ChunkedPrefillState:
+    """One in-flight same-length admission group (chunked prefill)."""
+
+    prompts: np.ndarray           # (k, s0) int32 — identical prompt lengths
+    rids: list[int]
+    budgets: list[int]
+    slots: list[int]              # reserved pool slots, one per request
+    cache: Any = None             # (L, k, max_len, ...) device cache; None = virtual
+    frontend: Any = None          # capacity-padded VLM frontend stub (or None)
+    pos: int = 0                  # prompt tokens prefilled so far
+    first: np.ndarray | None = None  # first emitted token per request (when done)
+
+    @property
+    def s0(self) -> int:
+        return self.prompts.shape[1]
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= self.s0
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,16 @@ class DutyCyclePolicy:
 
     def __init__(self, profile: AccelProfile):
         self.p = profile
+        # busy-time ledger by tick kind ("prefill" / "decode") — with chunked
+        # prefill the scheduler's ticks are MIXED, and a policy deciding what
+        # to do with the next gap gets to see how the busy time it just
+        # observed was composed
+        self.busy_s: dict[str, float] = {}
+
+    def on_busy(self, kind: str, duration_s: float) -> None:
+        """Observation hook: the scheduler reports every busy tick (chunked
+        prefill advance, masked decode step) before the next gap decision."""
+        self.busy_s[kind] = self.busy_s.get(kind, 0.0) + float(duration_s)
 
     def on_gap(self, gap_s: float) -> GapOutcome:
         raise NotImplementedError

@@ -16,7 +16,11 @@ Scheduler states → the paper's strategy taxonomy (§3.2):
              power model charges a half-empty pool roughly the static floor
              the paper's clock-stretching pays.
   PREFILL    an admission in flight — compute-dense, charged at full
-             utilization, billed to the admitted request's ledger.
+             utilization, billed to the admitted request's ledger. With
+             ``prefill_chunk`` set, admission is CHUNKED: a FIFO group of
+             same-prompt-length requests advances one chunk per tick while
+             the masked decode step keeps serving the decoding slots, so a
+             long prompt no longer freezes the pool.
   IDLE       pool drained, next arrival ahead: the policy holds the device
              configured at P_idle (paper: Idle-Waiting), either for the
              whole gap or up to its threshold τ.
@@ -46,10 +50,10 @@ import numpy as np
 
 from repro.core.energy import DEFAULT_CHIP, TPUChip
 from repro.core.workload import AccelProfile, SimResult
-from repro.serving.engine import InferenceEngine, tpu_reload_costs
+from repro.serving.engine import ChunkedPrefillState, InferenceEngine, tpu_reload_costs
 from repro.serving.load import Request
 from repro.serving.policy import DutyCyclePolicy, make_policy
-from repro.serving.slots import SlotInfo, SlotPool
+from repro.serving.slots import SlotPool
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +72,7 @@ class EngineCalibration:
         self.engine = engine
         self.repeats = repeats
         self._prefill: dict[tuple[int, int], float] = {}
+        self._chunkt: dict[tuple[int, int], float] = {}
         self._step: float | None = None
 
     def _time(self, fn) -> float:
@@ -89,6 +94,16 @@ class EngineCalibration:
             )
         return self._prefill[key]
 
+    def chunk_s(self, batch: int, chunk_tokens: int) -> float:
+        """One chunked-prefill tick (``chunk_tokens`` tokens, group of
+        ``batch``) — timed on the REAL chunk step, whose attention spans the
+        whole cache capacity, not on a standalone short prefill."""
+        key = (batch, chunk_tokens)
+        if key not in self._chunkt:
+            self._chunkt[key] = self._time(
+                self.engine.chunk_step_probe(batch, chunk_tokens))
+        return self._chunkt[key]
+
     def step_s(self) -> float:
         if self._step is None:
             eng = self.engine
@@ -109,6 +124,9 @@ class FixedCalibration:
 
     def prefill_s(self, batch: int, s0: int) -> float:
         return self.base + self.per_tok * batch * s0
+
+    # one affine model prices blocking prefills and chunk ticks alike
+    chunk_s = prefill_s
 
     def step_s(self) -> float:
         return self._step
@@ -142,6 +160,7 @@ class ServeReport:
     time_s: float    # makespan (first arrival → last finish)
     reloads: int
     missed: int
+    chunks: int = 0  # prefill chunks processed (chunked admission only)
 
     @property
     def items(self) -> int:
@@ -168,9 +187,10 @@ class ServeReport:
         return SimResult(self.items, self.energy_j, self.time_s, self.missed)
 
     def summary(self) -> str:
+        extra = f" chunks={self.chunks}" if self.chunks else ""
         return (f"{self.mode:11s} items={self.items} items/J={self.items_per_joule:.5f} "
                 f"p50={self.p50_s * 1e3:.1f}ms p99={self.p99_s * 1e3:.1f}ms "
-                f"reloads={self.reloads} missed={self.missed}")
+                f"reloads={self.reloads} missed={self.missed}{extra}")
 
 
 def _tpu_profile(t_step: float, chip: TPUChip, chips: int, cfg) -> AccelProfile:
@@ -194,20 +214,35 @@ class ContinuousBatchingScheduler:
     (tokens are genuine greedy continuations); ``execute=False`` runs the
     identical admission/retirement/energy logic on a virtual pool with a
     ``FixedCalibration`` — deterministic, engine-free (policy studies).
+
+    ``prefill_chunk=None`` (default) admits with BLOCKING prefill: the whole
+    prompt is prefilled in one call and every decoding slot stalls for its
+    duration. ``prefill_chunk=C`` switches to CHUNKED admission: a FIFO
+    group of waiting same-prompt-length requests reserves free slots and its
+    prompts advance C tokens per tick through one batched
+    ``chunked_prefill_step`` while the masked decode step keeps serving the
+    decoding slots between chunks — a long prompt no longer freezes the
+    pool. Both paths emit token-for-token identical outputs: the decode step
+    is per-slot independent, so tokens depend only on each request's own
+    prefilled cache.
     """
 
     def __init__(self, engine: InferenceEngine, *,
                  policy: str | DutyCyclePolicy = "adaptive",
                  chip: TPUChip = DEFAULT_CHIP, chips: int = 1,
                  execute: bool = True, calibration=None,
-                 prefill_util: float = 1.0, policy_kw: dict | None = None):
+                 prefill_util: float = 1.0, prefill_chunk: int | None = None,
+                 policy_kw: dict | None = None):
         if not execute and calibration is None:
             raise ValueError("execute=False needs an explicit calibration")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.engine = engine
         self.chip = chip
         self.chips = chips
         self.execute = execute
         self.prefill_util = prefill_util
+        self.prefill_chunk = prefill_chunk
         self.cal = calibration if calibration is not None else EngineCalibration(engine)
         sc = engine.sc
         self.pool = (engine.make_pool() if execute else
@@ -218,6 +253,7 @@ class ContinuousBatchingScheduler:
                        else make_policy(policy, self.profile, **(policy_kw or {})))
         self.admitted = 0
         self.completed = 0
+        self.chunks = 0
 
     # -- one request's terminal bookkeeping ---------------------------------
     def _maybe_finish(self, slot: int, rec: RequestRecord, t: float,
@@ -230,9 +266,10 @@ class ContinuousBatchingScheduler:
             self.completed += 1
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
+        mode = "chunked" if self.prefill_chunk else "continuous"
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         if not reqs:
-            return ServeReport("continuous", [], 0.0, 0.0, 0, 0)
+            return ServeReport(mode, [], 0.0, 0.0, 0, 0)
         for r in reqs:
             if r.new_tokens < 1:
                 raise ValueError(f"request {r.rid}: new_tokens must be >= 1")
@@ -243,51 +280,117 @@ class ContinuousBatchingScheduler:
         recs = {r.rid: RequestRecord(r.rid, r.arrival_s, len(r.prompt), r.new_tokens)
                 for r in reqs}
         deadlines = {r.rid: r.deadline_s for r in reqs}
-        self.admitted = self.completed = 0
+        self.admitted = self.completed = self.chunks = 0
+        self.policy.busy_s.clear()  # per-run ledger (τ estimator state persists)
         n = len(reqs)
         pool, chip, chips = self.pool, self.chip, self.chips
         t = reqs[0].arrival_s
         gap_energy = 0.0
         reloads = 0
         i = 0
+        group: ChunkedPrefillState | None = None
         guard = 0
-        guard_max = 16 * (n + sum(r.new_tokens for r in reqs)) + 64
+        cn = self.prefill_chunk or 1
+        guard_max = 16 * (n + sum(r.new_tokens for r in reqs)
+                          + sum(-(-len(r.prompt) // cn) for r in reqs)) + 64
 
         while self.completed < n:
             guard += 1
             assert guard <= guard_max, "scheduler failed to make progress"
+            progressed = False
 
-            # admissions: fill free slots from everything that has arrived
-            while i < n and reqs[i].arrival_s <= t and pool.active_count < pool.max_batch:
-                r = reqs[i]
-                slot = pool.free_slots()[0]
-                rec = recs[r.rid]
-                tp = self.cal.prefill_s(1, len(r.prompt))
-                if self.execute:
-                    first = self.engine.prefill_into_slot(
-                        pool, slot, r.prompt, rid=r.rid, budget=r.new_tokens)
-                else:
-                    first = 0
-                    pool.slots[slot] = SlotInfo(rid=r.rid, pos=len(r.prompt),
-                                                budget=r.new_tokens, emitted=1)
-                    pool.active[slot] = True
-                rec.admit_s = t
-                t += tp
-                rec.energy_j += chip.step_power(self.prefill_util) * chips * tp
-                rec.tokens.append(first)
-                self.admitted += 1
+            if self.prefill_chunk is None:
+                # BLOCKING admissions: fill free slots from everything that
+                # has arrived; each prefill stalls the whole pool
+                while i < n and reqs[i].arrival_s <= t and pool.free_count:
+                    r = reqs[i]
+                    slot = pool.next_free()
+                    rec = recs[r.rid]
+                    tp = self.cal.prefill_s(1, len(r.prompt))
+                    if self.execute:
+                        first = self.engine.prefill_into_slot(
+                            pool, slot, r.prompt, rid=r.rid, budget=r.new_tokens)
+                    else:
+                        first = 0
+                        pool.admit_virtual(slot, rid=r.rid, pos=len(r.prompt),
+                                           budget=r.new_tokens)
+                    rec.admit_s = t
+                    t += tp
+                    self.policy.on_busy("prefill", tp)
+                    rec.energy_j += chip.step_power(self.prefill_util) * chips * tp
+                    rec.tokens.append(first)
+                    self.admitted += 1
+                    i += 1
+                    self._maybe_finish(slot, rec, t, deadlines[r.rid])
+            elif group is None and i < n and reqs[i].arrival_s <= t and pool.free_count:
+                # CHUNKED admission: reserve slots for the maximal FIFO run of
+                # waiting same-prompt-length requests (one batched prefill)
+                g = [reqs[i]]
                 i += 1
-                self._maybe_finish(slot, rec, t, deadlines[r.rid])
+                while (i < n and len(g) < pool.free_count
+                       and reqs[i].arrival_s <= t
+                       and len(reqs[i].prompt) == len(g[0].prompt)):
+                    g.append(reqs[i])
+                    i += 1
+                slots = []
+                for r in g:
+                    slot = pool.next_free()
+                    pool.reserve(slot, rid=r.rid)
+                    slots.append(slot)
+                    recs[r.rid].admit_s = t
+                    self.admitted += 1
+                prompts = np.stack([r.prompt for r in g]).astype(np.int32)
+                rids = [r.rid for r in g]
+                budgets = [r.new_tokens for r in g]
+                if self.execute:
+                    group = self.engine.begin_chunked_prefill(
+                        pool, slots, prompts, rids=rids, budgets=budgets)
+                else:
+                    group = ChunkedPrefillState(prompts=prompts, rids=rids,
+                                                budgets=budgets, slots=slots)
 
-            if pool.active_count:
+            if group is not None:
+                # PREFILL: advance the admitting group by one chunk; the
+                # chunk's energy is split over the group's requests
+                k = len(group.rids)
+                ttok = min(self.prefill_chunk, group.s0 - group.pos)
+                tp = self.cal.chunk_s(k, ttok)
+                if self.execute:
+                    self.engine.chunked_prefill_step(group, self.prefill_chunk)
+                else:
+                    group.pos += ttok
+                t += tp
+                self.chunks += 1
+                self.policy.on_busy("prefill", tp)
+                share = chip.step_power(self.prefill_util) * chips * tp / k
+                for rid in group.rids:
+                    recs[rid].energy_j += share
+                progressed = True
+                if group.done:
+                    if self.execute:
+                        first = self.engine.finish_chunked_prefill(pool, group)
+                    else:
+                        first = np.zeros(k, np.int32)
+                        for j, slot in enumerate(group.slots):
+                            pool.activate(slot, None, rid=group.rids[j],
+                                          pos=group.s0, budget=group.budgets[j],
+                                          first_tok=0)
+                    for j, rid in enumerate(group.rids):
+                        rec = recs[rid]
+                        rec.tokens.append(int(first[j]))
+                        self._maybe_finish(group.slots[j], rec, t, deadlines[rid])
+                    group = None
+
+            if pool.decoding_count:
                 # DECODING: one masked step over the pool at measured occupancy
                 ts = self.cal.step_s()
-                util = pool.active_count / pool.max_batch
+                util = pool.decoding_count / pool.max_batch
                 nxt = (self.engine.masked_decode_step(pool) if self.execute
                        else np.zeros(pool.max_batch, np.int32))
                 t += ts
-                share = chip.step_power(util) * chips * ts / pool.active_count
-                for slot in pool.active_slots():
+                self.policy.on_busy("decode", ts)
+                share = chip.step_power(util) * chips * ts / pool.decoding_count
+                for slot in pool.decoding_slots():
                     info = pool.slots[slot]
                     info.pos += 1
                     info.emitted += 1
@@ -296,10 +399,12 @@ class ContinuousBatchingScheduler:
                     rec.tokens.append(int(nxt[slot]))
                     rec.energy_j += share
                     self._maybe_finish(slot, rec, t, deadlines[info.rid])
-            elif i < n:
+                progressed = True
+
+            if not progressed and group is None and i < n:
                 # IDLE/OFF: pool drained — the online policy owns the gap.
-                # (the admission loop above took everything with arrival <= t
-                # into the now-empty pool, so the gap is strictly positive)
+                # (everything with arrival <= t was admitted above, so the
+                # gap is strictly positive)
                 gap = reqs[i].arrival_s - t
                 assert gap > 0
                 out = self.policy.on_gap(gap)
@@ -314,8 +419,8 @@ class ContinuousBatchingScheduler:
         energy = (self.profile.e_cfg_j  # the one true initial configuration
                   + sum(rec.energy_j for rec in records) + gap_energy)
         makespan = max(rec.finish_s for rec in records) - reqs[0].arrival_s
-        return ServeReport("continuous", records, energy, makespan, reloads,
-                           sum(rec.missed for rec in records))
+        return ServeReport(mode, records, energy, makespan, reloads,
+                           sum(rec.missed for rec in records), chunks=self.chunks)
 
 
 # ---------------------------------------------------------------------------

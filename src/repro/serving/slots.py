@@ -18,9 +18,16 @@ instead of lockstep fixed batches:
     are dead data, fully overwritten by the next ``admit``. (The masked
     decode step clamps inactive slots to position 0, so their scribbles land
     in dead rows too.)
+  * chunked admission reserves slots up-front (``reserve`` → ``admitting``
+    state, excluded from the decode mask) and lands the prefilled cache with
+    ``activate`` once the group's last chunk completed.
+  * an explicit free-slot deque makes the scheduler's admission scan O(1)
+    per tick (and gives FIFO slot reuse) instead of scanning all
+    ``max_batch`` slots.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -86,8 +93,12 @@ class SlotPool:
             cache_defs(cfg, batch=max_batch, max_len=max_len), jax.random.PRNGKey(0)
         )
         self.slots = [SlotInfo() for _ in range(max_batch)]
-        self.active = np.zeros(max_batch, bool)
+        self.active = np.zeros(max_batch, bool)       # slot occupied at all
+        self.admitting = np.zeros(max_batch, bool)    # reserved, prefill in flight
         self.tok = np.zeros(max_batch, np.int32)  # next decode input per slot
+        # explicit free-slot list: admission pops in O(1) instead of scanning
+        # all max_batch slots every scheduler tick
+        self._free = collections.deque(range(max_batch))
         self._write = jax.jit(self._write_impl, donate_argnums=(0,))
 
     @staticmethod
@@ -105,31 +116,90 @@ class SlotPool:
     def active_count(self) -> int:
         return int(self.active.sum())
 
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def next_free(self) -> int:
+        """Peek the next free slot (FIFO over retirements) without claiming it."""
+        return self._free[0]
+
     def free_slots(self) -> list[int]:
-        return [i for i in range(self.max_batch) if not self.active[i]]
+        return list(self._free)
 
     def active_slots(self) -> list[int]:
         return [i for i in range(self.max_batch) if self.active[i]]
+
+    def decode_mask(self) -> np.ndarray:
+        """Slots the masked decode step should advance: active and NOT still
+        admitting (their prefill is in flight; their cache rows are dead)."""
+        return self.active & ~self.admitting
+
+    @property
+    def decoding_count(self) -> int:
+        return int(self.decode_mask().sum())
+
+    def decoding_slots(self) -> list[int]:
+        m = self.decode_mask()
+        return [i for i in range(self.max_batch) if m[i]]
 
     def positions(self) -> np.ndarray:
         return np.asarray([s.pos for s in self.slots], np.int32)
 
     # -- lifecycle ----------------------------------------------------------
+    def _claim(self, slot: int) -> None:
+        assert not self.active[slot], f"slot {slot} already active"
+        self._free.remove(slot)  # O(free) — only paid at admission, not per tick
+        self.active[slot] = True
+
     def admit(self, slot: int, req_cache: dict, *, rid: int, pos: int,
               budget: int, first_tok: int) -> None:
         """Place a prefilled request (cache already grown to max_len) into a
         free slot. ``pos`` is the prompt length; ``first_tok`` the argmax of
         the prefill logits (the request's first emitted token)."""
         assert self.cache is not None, "cannot admit a real cache into a virtual pool"
-        assert not self.active[slot], f"slot {slot} already active"
         assert pos + budget <= self.max_len, (pos, budget, self.max_len)
         assert budget >= 1
+        self._claim(slot)
         self.cache = self._write(self.cache, req_cache, jnp.int32(slot))
         self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
-        self.active[slot] = True
+        self.tok[slot] = first_tok
+
+    def admit_virtual(self, slot: int, *, rid: int, pos: int, budget: int) -> None:
+        """Claim a slot with bookkeeping only (virtual pools / engine-free
+        scheduler runs): no device cache is written."""
+        assert pos + budget <= self.max_len, (pos, budget, self.max_len)
+        assert budget >= 1
+        self._claim(slot)
+        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
+
+    def reserve(self, slot: int, *, rid: int) -> None:
+        """Claim a free slot for a request whose chunked prefill is about to
+        start. The slot is ``admitting``: occupied (no other admission may
+        take it) but excluded from the masked decode step until
+        ``activate`` lands the prefilled cache."""
+        self._claim(slot)
+        self.admitting[slot] = True
+        self.slots[slot] = SlotInfo(rid=rid)
+
+    def activate(self, slot: int, req_cache: dict | None, *, rid: int, pos: int,
+                 budget: int, first_tok: int) -> None:
+        """Flip a reserved slot admitting → decoding once its chunked prefill
+        completed. ``req_cache`` is the request's prefilled batch-1 cache
+        (None for virtual pools)."""
+        assert self.active[slot] and self.admitting[slot], f"slot {slot} not admitting"
+        assert self.slots[slot].rid == rid, (self.slots[slot].rid, rid)
+        assert pos + budget <= self.max_len, (pos, budget, self.max_len)
+        assert budget >= 1
+        if self.cache is not None:
+            self.cache = self._write(self.cache, req_cache, jnp.int32(slot))
+        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
+        self.admitting[slot] = False
         self.tok[slot] = first_tok
 
     def retire(self, slot: int) -> None:
         assert self.active[slot], f"slot {slot} not active"
         self.active[slot] = False
+        self.admitting[slot] = False
         self.slots[slot] = SlotInfo()
+        self._free.append(slot)

@@ -1,0 +1,91 @@
+"""Arrival-process generators (serving/load.py): empirical rates pinned to
+the configured rates, determinism under a fixed seed, stream structure."""
+import numpy as np
+import pytest
+
+from repro.serving.load import (
+    bursty_stream,
+    bursty_stream_for_service,
+    diurnal_stream,
+    mean_service_s,
+    poisson_stream,
+)
+from repro.serving.scheduler import FixedCalibration
+
+
+def _arrivals(reqs) -> np.ndarray:
+    return np.asarray([r.arrival_s for r in reqs])
+
+
+def test_poisson_empirical_rate_matches_configured():
+    rate = 50.0
+    reqs = poisson_stream(8000, rate_hz=rate, seed=0, vocab_size=64)
+    arr = _arrivals(reqs)
+    emp = len(reqs) / arr[-1]
+    assert emp == pytest.approx(rate, rel=0.05)
+    # exponential gaps: CV ~ 1 for a Poisson process
+    gaps = np.diff(arr)
+    assert np.std(gaps) / np.mean(gaps) == pytest.approx(1.0, rel=0.1)
+
+
+def test_bursty_empirical_rate_matches_mmpp_mean():
+    """Markov-modulated mean gap = pb/fast + (1-pb)/slow with stationary
+    busy fraction pb = p_enter / (p_enter + p_leave)."""
+    fast, slow, p_leave, p_enter = 200.0, 2.0, 0.1, 0.7
+    reqs = bursty_stream(20000, fast_rate_hz=fast, slow_rate_hz=slow,
+                         p_leave_burst=p_leave, p_enter_burst=p_enter,
+                         seed=1, vocab_size=64)
+    gaps = np.diff(_arrivals(reqs))
+    pb = p_enter / (p_enter + p_leave)
+    expect = pb / fast + (1 - pb) / slow
+    assert np.mean(gaps) == pytest.approx(expect, rel=0.1)
+    # genuinely bimodal: plenty of burst gaps AND a heavy quiet tail
+    assert np.mean(gaps < 2.0 / fast) > 0.5
+    assert np.mean(gaps > 0.1 / slow) > 0.02
+
+
+def test_diurnal_empirical_rate_matches_time_average():
+    """Thinned rate-varying Poisson: overall rate ≈ time-average intensity
+    base + (peak-base)/2 over many periods."""
+    base, peak, period = 20.0, 60.0, 5.0
+    reqs = diurnal_stream(6000, base_rate_hz=base, peak_rate_hz=peak,
+                          period_s=period, seed=2, vocab_size=64)
+    arr = _arrivals(reqs)
+    assert arr[-1] > 20 * period  # averages over many periods
+    emp = len(reqs) / arr[-1]
+    assert emp == pytest.approx(base + (peak - base) / 2.0, rel=0.1)
+    # intensity actually varies: the busiest period-phase bin sees well over
+    # the average rate, the quietest well under
+    phase = np.mod(arr, period)
+    counts, _ = np.histogram(phase, bins=10, range=(0.0, period))
+    assert counts.max() > 1.5 * counts.min()
+
+
+@pytest.mark.parametrize("gen,kw", [
+    (poisson_stream, dict(rate_hz=40.0)),
+    (bursty_stream, dict(fast_rate_hz=200.0, slow_rate_hz=2.0)),
+    (diurnal_stream, dict(base_rate_hz=10.0, peak_rate_hz=50.0, period_s=3.0)),
+])
+def test_generators_deterministic_under_fixed_seed(gen, kw):
+    a = gen(200, seed=9, vocab_size=128, prompt_lens=(4, 8), new_tokens=(2, 6), **kw)
+    b = gen(200, seed=9, vocab_size=128, prompt_lens=(4, 8), new_tokens=(2, 6), **kw)
+    assert [r.rid for r in a] == [r.rid for r in b]
+    np.testing.assert_array_equal(_arrivals(a), _arrivals(b))
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert ra.new_tokens == rb.new_tokens
+    c = gen(200, seed=10, vocab_size=128, prompt_lens=(4, 8), new_tokens=(2, 6), **kw)
+    assert not np.array_equal(_arrivals(a), _arrivals(c))  # seed matters
+
+
+def test_bursty_stream_for_service_scales_with_calibration():
+    """Burst rate tracks the calibration's mean service time: a 2x slower
+    engine gets a 2x slower stream (same regime, different clock)."""
+    fast_cal = FixedCalibration(step_s=0.002, prefill_base_s=0.001,
+                                prefill_per_tok_s=1e-4)
+    slow_cal = FixedCalibration(step_s=0.004, prefill_base_s=0.002,
+                                prefill_per_tok_s=2e-4)
+    assert mean_service_s(slow_cal) == pytest.approx(2 * mean_service_s(fast_cal))
+    a = bursty_stream_for_service(fast_cal, 400, vocab_size=64, seed=0)
+    b = bursty_stream_for_service(slow_cal, 400, vocab_size=64, seed=0)
+    assert _arrivals(b)[-1] == pytest.approx(2 * _arrivals(a)[-1], rel=1e-6)

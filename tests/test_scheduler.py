@@ -1,5 +1,10 @@
 """Continuous-batching scheduler: slot invariants, exact token accounting,
-online streaming-τ convergence, vectorized traces."""
+chunked-prefill equivalence, online streaming-τ convergence, vectorized
+traces."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -30,6 +35,20 @@ FAMILY_ARCHS = ("granite-3-8b", "deepseek-v3-671b", "mamba2-780m",
 
 def _engine(arch, max_batch=2, max_len=32):
     return InferenceEngine(get_reduced_config(arch),
+                           sc=ServeConfig(max_batch=max_batch, max_len=max_len))
+
+
+def _engine_f32(arch, max_batch=2, max_len=32):
+    """Engine with everything float32: the chunked-vs-blocking equivalence is
+    exact modulo float reassociation at chunk boundaries, and in f32 an
+    argmax tie within that reassociation noise is measure-zero — bf16
+    quantizes logits coarsely enough that near-ties flip."""
+    from repro.models.model import init_model
+
+    cfg = dataclasses.replace(get_reduced_config(arch), dtype=jnp.float32)
+    params = jax.tree.map(lambda t: t.astype(jnp.float32),
+                          init_model(cfg, jax.random.PRNGKey(0)))
+    return InferenceEngine(cfg, params=params,
                            sc=ServeConfig(max_batch=max_batch, max_len=max_len))
 
 
@@ -94,6 +113,121 @@ def test_masked_decode_exact_under_staggered_occupancy(arch):
     assert toks1 == eng.generate(p1[None], 5)[0].tolist()
     ref2 = eng.generate(p2[None], 5)[0].tolist()
     assert toks2 == ref2[: len(toks2)] and len(toks2) == 3
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_chunked_scheduler_token_identical_every_family(arch):
+    """ACCEPTANCE: chunked admission must emit token-for-token identical
+    outputs to the blocking-prefill scheduler for every cache layout — the
+    decode step is per-slot independent, so tokens depend only on each
+    request's own prefilled cache, and the chunked cache must equal the
+    blocking one."""
+    eng = _engine_f32(arch, max_batch=3, max_len=48)
+    reqs = bursty_stream(8, fast_rate_hz=2000.0, slow_rate_hz=20.0, seed=3,
+                         vocab_size=eng.cfg.vocab_size, prompt_lens=(4, 9),
+                         new_tokens=(1, 4))
+    block = ContinuousBatchingScheduler(eng, policy="adaptive").run(reqs)
+    sched = ContinuousBatchingScheduler(eng, policy="adaptive", prefill_chunk=4)
+    chunk = sched.run(reqs)
+    assert chunk.mode == "chunked" and chunk.chunks > 0
+    assert sched.admitted == sched.completed == len(reqs)
+    assert sched.pool.active_count == 0 and not sched.pool.admitting.any()
+    tb = {r.rid: r.tokens for r in block.records}
+    tc = {r.rid: r.tokens for r in chunk.records}
+    assert tb == tc
+
+
+def test_chunked_partial_and_oversized_chunks():
+    """Chunk sizes that don't divide the prompt (final partial chunk) and
+    chunks larger than the whole prompt must both reproduce blocking."""
+    eng = _engine_f32("granite-3-8b", max_batch=2, max_len=48)
+    from repro.serving.load import Request
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, eng.cfg.vocab_size, 11).astype(np.int32)
+    reqs = [Request(rid=0, arrival_s=0.0, prompt=prompt, new_tokens=5)]
+    ref = ContinuousBatchingScheduler(eng, policy="idle_waiting").run(reqs)
+    for chunk in (4, 32):
+        rep = ContinuousBatchingScheduler(eng, policy="idle_waiting",
+                                          prefill_chunk=chunk).run(reqs)
+        assert rep.records[0].tokens == ref.records[0].tokens
+        assert rep.chunks == -(-11 // chunk)
+
+
+def test_chunked_same_length_group_admission():
+    """A burst of same-prompt-length arrivals must admit as ONE batched
+    group: ceil(s0/chunk) chunk calls total, identical admit times."""
+    eng = _engine("whisper-tiny", max_batch=4, max_len=64)
+    cal = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                           prefill_per_tok_s=5e-4)
+    from repro.serving.load import Request
+
+    reqs = [Request(rid=i, arrival_s=0.0, prompt=np.zeros(16, np.int32),
+                    new_tokens=4) for i in range(3)]
+    sched = ContinuousBatchingScheduler(eng, policy="idle_waiting",
+                                        execute=False, calibration=cal,
+                                        prefill_chunk=8)
+    rep = sched.run(reqs)
+    assert rep.chunks == 2  # one group of 3, 16 tokens in chunks of 8
+    assert len({r.admit_s for r in rep.records}) == 1
+
+
+def test_chunked_admission_fifo_across_bursts():
+    """Admission order is FIFO in arrival order, across bursts and in both
+    admission paths — same-length batching only groups CONSECUTIVE waiting
+    requests, it never reorders past a different-length arrival."""
+    eng = _engine("whisper-tiny", max_batch=4, max_len=64)
+    cal = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                           prefill_per_tok_s=5e-4)
+    reqs = bursty_stream(48, fast_rate_hz=400.0, slow_rate_hz=3.0, seed=7,
+                         vocab_size=64, prompt_lens=(4, 8, 16),
+                         new_tokens=(2, 8))
+    for chunk in (None, 8):
+        rep = ContinuousBatchingScheduler(eng, policy="adaptive",
+                                          execute=False, calibration=cal,
+                                          prefill_chunk=chunk).run(reqs)
+        admits = [r.admit_s for r in sorted(rep.records, key=lambda r: r.rid)]
+        assert all(a <= b for a, b in zip(admits, admits[1:]))  # FIFO
+
+
+def test_slot_pool_free_list_and_admitting_state():
+    """The explicit free-slot list stays the exact complement of active
+    slots through reserve/activate/retire cycles, and admitting slots are
+    excluded from the decode mask until activation."""
+    from repro.serving.slots import SlotPool
+
+    pool = SlotPool(get_reduced_config("whisper-tiny"), max_batch=4,
+                    max_len=32, virtual=True)
+    assert pool.free_slots() == [0, 1, 2, 3] and pool.free_count == 4
+    pool.admit_virtual(0, rid=10, pos=4, budget=2)
+    pool.reserve(1, rid=11)
+    assert pool.free_slots() == [2, 3]
+    assert pool.active_count == 2 and pool.decoding_count == 1
+    assert pool.decoding_slots() == [0]
+    pool.activate(1, None, rid=11, pos=8, budget=3, first_tok=0)
+    assert pool.decoding_count == 2 and not pool.admitting.any()
+    pool.retire(0)
+    assert pool.free_slots() == [2, 3, 0]  # FIFO reuse: retired goes last
+    assert pool.next_free() == 2
+    with pytest.raises(AssertionError):
+        pool.activate(2, None, rid=9, pos=1, budget=1, first_tok=0)  # not reserved
+
+
+def test_policy_busy_hook_sees_mixed_ticks():
+    """Duty-cycle policies observe every busy tick: with chunked admission
+    the busy ledger splits into prefill and decode components."""
+    eng = _engine("whisper-tiny", max_batch=2, max_len=64)
+    cal = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                           prefill_per_tok_s=5e-4)
+    reqs = poisson_stream(10, rate_hz=50.0, seed=0, vocab_size=64,
+                          prompt_lens=(8, 16), new_tokens=(2, 6))
+    sched = ContinuousBatchingScheduler(eng, policy="adaptive", execute=False,
+                                        calibration=cal, prefill_chunk=8)
+    sched.run(reqs)
+    busy = sched.policy.busy_s
+    assert busy["prefill"] > 0 and busy["decode"] > 0
+    # at least one chunk-sized prefill tick per chunk at the calibrated floor
+    assert busy["prefill"] >= sched.chunks * cal.prefill_s(1, 1)
 
 
 def test_scheduler_queue_pressure_and_deadlines():
