@@ -10,6 +10,13 @@ claims as floors:
     items_per_j_gain      continuous items/J vs static        >= 1.0
     p50_speedup           continuous p50 vs static            >= 1.0
     chunked_p99_speedup   chunked-admission p99 vs blocking   >= 1.0
+    spec_accepted_per_tick       tokens committed per speculative
+                                 verify tick                  >= 2.0
+                                 (>= 1.0 holds by construction — the floor
+                                 guards the DRAFTER's accepted surplus;
+                                 committed runs measure ~4.7-6)
+    speculative_items_per_j_gain speculative items/J vs plain
+                                 continuous decode            >= 1.15
 
   paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
   so the floor is a catastrophic-regression guard, not the real margin; the
@@ -37,6 +44,8 @@ SERVE_CHECKS = (  # (derived key, floor)
     ("items_per_j_gain", 1.0),
     ("p50_speedup", 1.0),
     ("chunked_p99_speedup", 1.0),
+    ("spec_accepted_per_tick", 2.0),
+    ("speculative_items_per_j_gain", 1.15),
 )
 LSTM_CHECKS = (
     ("tpu_seq_speedup", 1.0),

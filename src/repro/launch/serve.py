@@ -2,18 +2,28 @@
 (RQ2 on TPU), plus the legacy offline strategy comparison.
 
 Modes:
-  continuous  request-level scheduler: admission into free slots mid-decode
-              with BLOCKING prefill, one jitted masked decode step per tick,
-              online streaming-τ duty cycling between queue drains (default)
-  chunked     continuous scheduling with CHUNKED admission: FIFO same-length
-              groups advance --prefill-chunk prompt tokens per tick between
-              decode steps, so a long prompt never freezes the pool
-  compare     static-batch baseline vs continuous vs chunked, same stream
-  strategies  the offline gap-trace strategy comparison (WorkloadAwareServer)
+  continuous   request-level scheduler: admission into free slots mid-decode
+               with BLOCKING prefill, one jitted masked decode step per
+               tick, online streaming-τ duty cycling between queue drains
+               (default)
+  chunked      continuous scheduling with CHUNKED admission: FIFO
+               same-length groups advance --prefill-chunk prompt tokens per
+               tick between decode steps, so a long prompt never freezes
+               the pool
+  speculative  continuous scheduling with SPECULATIVE decode ticks: an
+               n-gram drafter proposes --speculate-k candidates per slot
+               and one batched verify pass commits the greedy-matched
+               prefix — several tokens per tick on repetitive output,
+               token-for-token identical to plain decode
+  compare      static baseline vs continuous vs chunked vs speculative,
+               same stream
+  strategies   the offline gap-trace strategy comparison
+               (WorkloadAwareServer)
 
 Examples:
   python -m repro.launch.serve --arch granite-3-8b --load bursty --n 60
   python -m repro.launch.serve --arch granite-3-8b --mode chunked --prefill-chunk 8
+  python -m repro.launch.serve --arch whisper-tiny --mode speculative --speculate-k 4
   python -m repro.launch.serve --arch granite-3-8b --mode compare --load poisson
   python -m repro.launch.serve --arch granite-3-8b --mode strategies --trace bursty
 """
@@ -41,10 +51,18 @@ from repro.serving.scheduler import (
 
 def _make_stream(args, cfg, cal):
     """Arrival rates scaled from the measured step costs so the stream
-    exercises both queue pressure and duty-cycle-relevant quiets."""
+    exercises both queue pressure and duty-cycle-relevant quiets.
+
+    Speculative modes default to REPETITIVE (period-4 tiled) prompts — the
+    templated-workload regime the n-gram drafter exploits; i.i.d.-random
+    prompts leave it only the model's own output repetitiveness."""
     service = mean_service_s(cal)
+    period = args.prompt_period
+    if period < 0:
+        period = 4 if args.mode in ("speculative", "compare") else 0
     kw = dict(seed=args.seed, vocab_size=cfg.vocab_size,
-              prompt_lens=(4, 8), new_tokens=(4, 24))
+              prompt_lens=(4, 8), new_tokens=(4, 24),
+              prompt_period=period or None)
     if args.load == "poisson":
         return poisson_stream(args.n, rate_hz=0.5 / service, **kw)
     if args.load == "diurnal":
@@ -58,11 +76,23 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--mode", default="continuous",
-                    choices=("continuous", "chunked", "compare", "strategies"))
+                    choices=("continuous", "chunked", "speculative", "compare",
+                             "strategies"))
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens per chunked-prefill tick; admission "
                          "batches same-length arrivals into one prefill call "
                          "(modes: chunked, compare)")
+    ap.add_argument("--prompt-period", type=int, default=-1,
+                    help="tile prompts from a per-request base pattern of "
+                         "this length (repetitive/templated workloads); "
+                         "0 = i.i.d. random prompts; default: 4 for "
+                         "speculative/compare modes, 0 otherwise")
+    ap.add_argument("--speculate-k", type=int, default=4,
+                    help="drafted candidate tokens per speculative verify "
+                         "tick; the n-gram drafter proposes them from each "
+                         "request's own prompt + emitted tokens, and greedy "
+                         "acceptance keeps output token-for-token identical "
+                         "to plain decode (modes: speculative, compare)")
     ap.add_argument("--load", default="bursty",
                     choices=("poisson", "bursty", "diurnal"))
     ap.add_argument("--policy", default="adaptive",
@@ -80,8 +110,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch)
+    slack = args.speculate_k if args.mode in ("speculative", "compare") else 0
     engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=args.batch,
-                                                 max_len=args.max_len))
+                                                 max_len=args.max_len,
+                                                 spec_slack=slack))
 
     if args.mode == "strategies":
         server = WorkloadAwareServer(engine, chips=args.chips)
@@ -111,7 +143,8 @@ def main(argv=None) -> int:
           f"t_step={cal.step_s() * 1e3:.2f} ms, pool={args.batch}")
     sched = ContinuousBatchingScheduler(
         engine, policy=args.policy, chips=args.chips, calibration=cal,
-        prefill_chunk=args.prefill_chunk if args.mode == "chunked" else None)
+        prefill_chunk=args.prefill_chunk if args.mode == "chunked" else None,
+        speculate_k=args.speculate_k if args.mode == "speculative" else None)
     rep = sched.run(reqs)
     print("  " + rep.summary())
     tau = sched.policy.tau
@@ -123,6 +156,10 @@ def main(argv=None) -> int:
             engine, policy=args.policy, chips=args.chips, calibration=cal,
             prefill_chunk=args.prefill_chunk).run(reqs)
         print("  " + chkd.summary())
+        spec = ContinuousBatchingScheduler(
+            engine, policy=args.policy, chips=args.chips, calibration=cal,
+            speculate_k=args.speculate_k).run(reqs)
+        print("  " + spec.summary())
         stat = run_static_batches(engine, reqs, policy=args.policy,
                                   chips=args.chips, calibration=cal,
                                   flush_s=16 * mean_service_s(cal))
@@ -130,7 +167,8 @@ def main(argv=None) -> int:
         print(f"  continuous/static items-per-J: "
               f"{rep.items_per_joule / stat.items_per_joule:.2f}x, "
               f"p50 speedup: {stat.p50_s / rep.p50_s:.2f}x, "
-              f"chunked/blocking p99 speedup: {rep.p99_s / chkd.p99_s:.2f}x")
+              f"chunked/blocking p99 speedup: {rep.p99_s / chkd.p99_s:.2f}x, "
+              f"speculative accepted/tick: {spec.accepted_per_tick:.2f}")
     return 0
 
 

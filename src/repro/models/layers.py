@@ -283,7 +283,14 @@ def attention_chunk(q, k_cache, v_cache, pos) -> jax.Array:
 
     Each query attends causally over cache[0..pos+i]; rows past the written
     prefix are dead data and masked out. This is ``attention_decode``
-    generalized from one query to a chunk of T."""
+    generalized from one query to a chunk of T.
+
+    The strict positional mask is also what makes speculative verify
+    windows rollback-free for attention caches: rows written for REJECTED
+    candidates sit past the committed prefix, so the next window's queries
+    never see them and its writes overwrite them — acceptance only moves
+    the slot's position, no cache surgery (``models.model.decode_verify``).
+    """
     b, t, h, d = q.shape
     kvh = k_cache.shape[2]
     g = h // kvh

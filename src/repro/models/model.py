@@ -477,21 +477,19 @@ def encoder_cross_cache(params, cfg: ArchConfig, frontend_embeds):
     return jax.vmap(lambda p: T._cross_kv(p["cross_attn"], enc, cfg))(params["blocks"])
 
 
-def prefill_chunk(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=None):
-    """Process one chunk of T prompt tokens against a full-capacity decode
-    cache at positions [pos, pos+T).
+def _chunk_forward(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=None,
+                   ssm_block=None):
+    """Per-family chunk body shared by ``prefill_chunk`` and ``decode_verify``:
+    T tokens against a full-capacity decode cache at positions [pos, pos+T).
+    Returns (final hidden states before norm: (B, T, D), cache).
 
-    tokens: (B, T) int32; pos: scalar int32 — the first cache position the
-    chunk writes. ``cache`` uses the decode layout (``cache_defs`` capacity,
-    zero-initialized; audio additionally needs ``encoder_cross_cache`` rows
-    filled up-front). Successive chunks compose to the blocking ``prefill``
-    recurrence: attention families mask dead cache rows past the written
-    prefix, SSM families carry conv tail + state between chunks. For VLM,
-    ``frontend_embeds`` must be padded to cache capacity on the seq axis so
-    every chunk can slice it at ``pos``. Returns (last-position logits,
-    cache) — after the final chunk the logits match ``prefill``'s up to
-    chunk-boundary float reassociation."""
+    ``ssm_block`` swaps the ssm/hybrid per-layer body (default
+    ``ssm_block_chunk``); ``decode_verify`` passes ``ssm_block_verify``,
+    whose cache slices carry a per-position snapshot axis for acceptance
+    rollback — everything else about the two paths is identical."""
     f = cfg.family
+    if ssm_block is None:
+        ssm_block = T.ssm_block_chunk
     x = embed_apply(params["embed"], tokens, cfg)
     if f == "vlm" and frontend_embeds is not None:
         fs = cfg.frontend_seq
@@ -539,7 +537,7 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=N
     elif f == "ssm":
         x, (conv, state) = run_stack_decode(
             params["blocks"], (cache["conv"], cache["state"]), x,
-            partial(T.ssm_block_chunk, cfg=cfg), pos, cfg,
+            partial(ssm_block, cfg=cfg), pos, cfg,
         )
         cache = {"conv": conv, "state": state}
     elif f == "hybrid":
@@ -558,7 +556,7 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=N
                 jax.lax.slice_in_dim(cache["state"], start, start + length, axis=0),
             )
             x, (conv, state) = run_stack_decode(
-                seg, segc, x, partial(T.ssm_block_chunk, cfg=cfg), pos, cfg
+                seg, segc, x, partial(ssm_block, cfg=cfg), pos, cfg
             )
             convs.append(conv)
             states.append(state)
@@ -570,9 +568,71 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=N
         }
     else:
         raise ValueError(f)
+    return x, cache
+
+
+def prefill_chunk(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=None):
+    """Process one chunk of T prompt tokens against a full-capacity decode
+    cache at positions [pos, pos+T).
+
+    tokens: (B, T) int32; pos: scalar int32 — the first cache position the
+    chunk writes. ``cache`` uses the decode layout (``cache_defs`` capacity,
+    zero-initialized; audio additionally needs ``encoder_cross_cache`` rows
+    filled up-front). Successive chunks compose to the blocking ``prefill``
+    recurrence: attention families mask dead cache rows past the written
+    prefix, SSM families carry conv tail + state between chunks. For VLM,
+    ``frontend_embeds`` must be padded to cache capacity on the seq axis so
+    every chunk can slice it at ``pos``. Returns (last-position logits,
+    cache) — after the final chunk the logits match ``prefill``'s up to
+    chunk-boundary float reassociation."""
+    x, cache = _chunk_forward(params, cache, tokens, pos, cfg, frontend_embeds)
     hidden = T.apply_norm(cfg, params["final_norm"], x)
     logits = unembed_apply(params["embed"], hidden[:, -1:], cfg)[:, 0]
     return _mask_pad_logits(logits, cfg).astype(jnp.float32), cache
+
+
+# ---------------------------------------------------------------------------
+# Speculative multi-token verify → (all-position logits, cache)
+# ---------------------------------------------------------------------------
+def decode_verify(params, cache, tokens, pos, cfg: ArchConfig, frontend_embeds=None):
+    """Score T candidate decode tokens in ONE pass at positions [pos, pos+T).
+
+    tokens: (B, T) int32 — the last committed next-input token followed by
+    T-1 drafted candidates. Unlike ``prefill_chunk`` this returns logits for
+    ALL T positions ((B, T, V) float32): logits[:, j] is the model's
+    next-token distribution after consuming tokens[:, :j+1], which is what
+    greedy acceptance compares the drafts against.
+
+    Cache semantics per family:
+      * attention families (dense/vlm/moe/deepseek/audio) reuse the
+        ``prefill_chunk`` machinery unchanged — K/V rows for rejected
+        candidates are dead data past the committed prefix, masked out by
+        position and overwritten by the next verify window. No rollback.
+      * ssm/hybrid recurrent leaves (``conv``/``state``) come back with a
+        per-position axis ((L, B, T, ...) snapshots after every candidate);
+        ``commit_verify`` selects the snapshot at the last accepted token.
+    """
+    x, cache = _chunk_forward(params, cache, tokens, pos, cfg, frontend_embeds,
+                              ssm_block=T.ssm_block_verify)
+    hidden = T.apply_norm(cfg, params["final_norm"], x)
+    logits = unembed_apply(params["embed"], hidden, cfg)
+    return _mask_pad_logits(logits, cfg).astype(jnp.float32), cache
+
+
+def commit_verify(cache, accepted, cfg: ArchConfig):
+    """Resolve a ``decode_verify`` cache to the accepted prefix.
+
+    ``accepted``: traced scalar — number of accepted draft tokens a ∈ [0, K],
+    i.e. a+1 tokens of the verify window were really consumed. Attention
+    caches need nothing (rollback is positional); ssm/hybrid recurrent
+    leaves select the per-position snapshot at index a, restoring the
+    ``cache_defs`` layout the next decode/verify step expects."""
+    if cfg.family in ("ssm", "hybrid"):
+        def take(t):  # (L, B, T, ...) → (L, B, ...) at position ``accepted``
+            return jax.lax.dynamic_index_in_dim(t, accepted, axis=2, keepdims=False)
+
+        cache = dict(cache, conv=take(cache["conv"]), state=take(cache["state"]))
+    return cache
 
 
 def _mask_pad_logits(logits, cfg: ArchConfig):

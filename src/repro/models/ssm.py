@@ -163,6 +163,36 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
     return y, h_final
 
 
+def ssd_states(x, dt, A, Bm, Cm, h0):
+    """Single-chunk SSD that also returns the state AFTER every position.
+
+    Same dual form as ``ssd_chunked`` restricted to one chunk (speculative
+    verify windows are K+1 ≤ ~8 tokens, so the quadratic seg matrix is tiny),
+    but instead of only the chunk-final state it materializes
+
+        h_i = exp(cum_i)·h0 + Σ_{j≤i} exp(cum_i - cum_j)·dt_j·(x_j ⊗ B_j)
+
+    for every i — the per-position snapshots speculative decode needs to
+    roll the recurrent state back to the last ACCEPTED token (a positional
+    KV cache rolls back for free; an SSM state does not).
+
+    x: (B,T,H,P), dt: (B,T,H), A: (H,), Bm/Cm: (B,T,N), h0: (B,H,P,N).
+    Returns (y: (B,T,H,P), h_all: (B,T,H,P,N)) with h_all[:, i] the state
+    after consuming i+1 tokens; y_i = C_i · h_i (matches ``ssm_reference``).
+    """
+    t = x.shape[1]
+    dA = dt * A  # (B,T,H), ≤ 0
+    cum = jnp.cumsum(dA, axis=1)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, T_i, T_j, H)
+    tri = jnp.tril(jnp.ones((t, t), bool))
+    seg = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+    contrib = jnp.einsum("bth,bthp,btn->bthpn", dt, x, Bm)  # dt_j · x_j ⊗ B_j
+    h_all = jnp.einsum("bijh,bjhpn->bihpn", seg, contrib)
+    h_all = h_all + jnp.exp(cum)[..., None, None] * h0[:, None]
+    y = jnp.einsum("bthpn,btn->bthp", h_all, Cm)
+    return y, h_all
+
+
 def ssm_reference(x, dt, A, Bm, Cm, h0=None):
     """Sequential oracle: literal per-step recurrence (tests only)."""
     b, s, h, p = x.shape
@@ -290,6 +320,55 @@ def mamba_chunk_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
     y = y.reshape(b, sl, nh * hd).astype(x.dtype)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
     return jnp.einsum("bsi,id->bsd", y, params["wo"]), new_conv, h_final.astype(ssm_state.dtype)
+
+
+def mamba_verify_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
+    """Speculative-verify pass: T candidate tokens in ONE chunk pass, with
+    per-position state snapshots for acceptance rollback.
+
+    Identical math to ``mamba_chunk_apply`` (carried raw conv tail + SSD
+    with h0), but every position's conv tail and SSM state are returned so
+    the caller can commit the snapshot at the last accepted token:
+
+    Returns (out, conv_all, h_all):
+      conv_all: (B, T, W-1, d_inner+2N) raw tail after each position
+      h_all:    (B, T, H, P, N) SSM state after each position
+    """
+    s = cfg.ssm
+    hd, st = s.head_dim, s.state_size
+    nh = s.num_heads(cfg.d_model)
+    di = s.d_inner(cfg.d_model)
+    w = s.conv_width
+    z, xs_raw, B_raw, C_raw, dt = _project(params, x, cfg)
+
+    cs_x = conv_state[:, :, :di]
+    cs_B = conv_state[:, :, di : di + st]
+    cs_C = conv_state[:, :, di + st :]
+    xs, _ = _conv_chunk(cs_x, xs_raw, params["conv_x"], params["conv_x_b"])
+    Bm, _ = _conv_chunk(cs_B, B_raw, params["conv_B"], params["conv_B_b"])
+    Cm, _ = _conv_chunk(cs_C, C_raw, params["conv_C"], params["conv_C_b"])
+    # per-position raw tails: after consuming t+1 tokens the window is rows
+    # [t+1, t+W) of concat(old tail, raw chunk) — position T-1 reproduces
+    # exactly the tail mamba_chunk_apply would carry forward
+    raw = jnp.concatenate([xs_raw, B_raw, C_raw], axis=-1)
+    full = jnp.concatenate([conv_state.astype(raw.dtype), raw], axis=1)
+    sl = x.shape[1]
+    conv_all = jnp.stack(
+        [full[:, t + 1 : t + w, :] for t in range(sl)], axis=1
+    ).astype(conv_state.dtype)
+
+    b = x.shape[0]
+    xh = xs.reshape(b, sl, nh, hd).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h_all = ssd_states(
+        xh, dtf, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        ssm_state.astype(jnp.float32),
+    )
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, sl, nh * hd).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, params["wo"]), conv_all, h_all.astype(ssm_state.dtype)
 
 
 def mamba_decode_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):

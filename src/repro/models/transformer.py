@@ -281,6 +281,17 @@ def ssm_block_chunk(p, x, cache, pos, cfg: ArchConfig):
     return x + y, (conv, state)
 
 
+def ssm_block_verify(p, x, cache, pos, cfg: ArchConfig):
+    """Speculative-verify body: like ``ssm_block_chunk`` but the returned
+    cache slices carry a per-position axis (T on axis 1 after batch) so the
+    engine can roll the recurrent state back to the last accepted token."""
+    conv, state = cache
+    y, conv_all, state_all = ssm_mod.mamba_verify_apply(
+        p["mamba"], apply_norm(cfg, p["ln"], x), conv, state, cfg
+    )
+    return x + y, (conv_all, state_all)
+
+
 def ssm_block_decode(p, x, cache, pos, cfg: ArchConfig):
     conv, state = cache
     y, conv, state = ssm_mod.mamba_decode_apply(

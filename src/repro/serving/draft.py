@@ -1,0 +1,115 @@
+"""Per-slot draft-token proposers for self-speculative decoding.
+
+The serving-side half of speculative decode: a drafter proposes K candidate
+next tokens per decoding request, the engine scores all K+1 positions in one
+``masked_speculative_step``, and greedy acceptance commits the matching
+prefix. The drafter needs no extra model weights — it exploits APPLICATION
+knowledge of the workload (the paper's core move, recast at the token
+level): served generations are locally repetitive, so a suffix match over
+the request's OWN context (prompt + tokens emitted so far) is a strong
+predictor of the next few tokens ("prompt-lookup" drafting).
+
+Wrong drafts only cost the per-candidate verify increment: acceptance is
+exact greedy match, so a drafter can never change emitted tokens, and the
+accept-0 worst case still commits one token per tick like plain decode.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NgramDrafter:
+    """Suffix-cache drafter over each request's own token history.
+
+    For a request whose context ends in some n-gram, find that n-gram's most
+    recent PREVIOUS occurrence in the context (longest n first) and replay
+    the tokens that followed it. Falls back to repeating the last token —
+    the period-1 guess — when no suffix recurs.
+
+    Lookup is an incremental index, not a scan: ``observe`` registers each
+    new n-gram's continuation position as tokens append (keeping the latest
+    two occurrences — at most one of them can be the current suffix itself),
+    so ``propose`` is O(max_ngram) per tick regardless of history length and
+    the host-side drafting never competes with the device step.
+
+    Histories are keyed by request id (slots are recycled); ``forget`` drops
+    a finished request's history so memory stays bounded by the pool.
+    """
+
+    def __init__(self, k: int, *, max_ngram: int = 4, min_ngram: int = 1,
+                 max_history: int = 1024):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = k
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self.max_history = max_history
+        self._hist: dict[int, list[int]] = {}
+        # per rid: n-gram tuple -> (latest, previous) continuation positions
+        self._idx: dict[int, dict[tuple, tuple[int, int | None]]] = {}
+
+    def begin(self, rid: int, context) -> None:
+        """Start a request's history (prompt tokens + its first emitted
+        token, i.e. everything resident in its cache plus the pending
+        next decode input)."""
+        self._hist[rid] = []
+        self._idx[rid] = {}
+        self.observe(rid, context)
+
+    def observe(self, rid: int, tokens) -> None:
+        """Fold a tick's committed tokens into the request's history."""
+        h = self._hist[rid]
+        idx = self._idx[rid]
+        for t in tokens:
+            h.append(int(t))
+            self._register(h, len(h), idx)
+        if len(h) > self.max_history:
+            # trim in half-window blocks so the index rebuild (positions
+            # shifted) is amortized O(1) per token, not per tick
+            del h[: len(h) - self.max_history // 2]
+            idx.clear()
+            for end in range(1, len(h) + 1):
+                self._register(h, end, idx)
+
+    def _register(self, h: list[int], end: int, idx: dict) -> None:
+        """Index the n-grams ending just before ``end``: their continuation
+        starts at ``end`` (for the newest position that continuation is
+        unknown yet — at propose time an entry equal to the history length
+        IS the current suffix and is skipped in favour of the previous
+        occurrence)."""
+        for n in range(self.min_ngram, self.max_ngram + 1):
+            if n > end:
+                break
+            gram = tuple(h[end - n : end])
+            prev = idx.get(gram)
+            idx[gram] = (end, prev[0] if prev else None)
+
+    def forget(self, rid: int) -> None:
+        self._hist.pop(rid, None)
+        self._idx.pop(rid, None)
+
+    def propose(self, rid: int) -> np.ndarray:
+        """(k,) int32 draft tokens for the request's next verify window."""
+        h = self._hist.get(rid)
+        if not h:
+            return np.zeros(self.k, np.int32)
+        out = self._suffix_match(h, self._idx[rid])
+        if out is None:
+            out = [h[-1]] * self.k  # period-1 fallback
+        return np.asarray(out, np.int32)
+
+    def _suffix_match(self, h: list[int], idx: dict) -> list[int] | None:
+        for n in range(min(self.max_ngram, len(h) - 1), self.min_ngram - 1, -1):
+            e = idx.get(tuple(h[-n:]))
+            if e is None:
+                continue
+            # most recent occurrence that is not the suffix itself (i.e.
+            # whose continuation lies strictly inside the history)
+            cont = e[0] if e[0] < len(h) else e[1]
+            if cont is None or cont >= len(h):
+                continue
+            out = h[cont : cont + self.k]
+            while len(out) < self.k:  # ran into the history's end
+                out.append(out[-1])
+            return out
+        return None

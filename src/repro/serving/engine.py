@@ -30,7 +30,9 @@ from repro.configs.base import ArchConfig
 from repro.core.energy import DEFAULT_CHIP, TPUChip
 from repro.core.workload import AccelProfile, break_even_tau, learn_tau, simulate
 from repro.models.model import (
+    commit_verify,
     decode_step,
+    decode_verify,
     encoder_cross_cache,
     init_model,
     prefill,
@@ -58,8 +60,13 @@ def tpu_reload_costs(cfg: ArchConfig, chip: TPUChip = DEFAULT_CHIP, *,
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 8
-    max_len: int = 256  # cache capacity (prompt + generated)
+    max_len: int = 256  # admission bound (prompt + generated)
     greedy: bool = True
+    # spare cache rows past max_len for speculative verify windows: a verify
+    # of K drafts writes K+1 positions starting anywhere up to max_len-2, so
+    # speculative serving needs spec_slack >= K to keep the window's tail
+    # writes off live positions (the rows only ever hold rejected drafts)
+    spec_slack: int = 0
 
 
 class InferenceEngine:
@@ -83,6 +90,9 @@ class InferenceEngine:
             donate_argnums=(1,),
         )
         self._masked_decode = jax.jit(self._masked_decode_impl, donate_argnums=(1,))
+        # speculative verify: one donated jit, keyed on K by the drafts'
+        # (max_batch, K) shape — a new K retraces, a fixed K reuses
+        self._masked_verify = jax.jit(self._masked_verify_impl, donate_argnums=(1,))
         # chunked prefill: T prompt tokens appended to a full-capacity cache
         # at a traced offset — one compile per (batch, chunk-length) signature
         self._chunk = jax.jit(
@@ -95,12 +105,9 @@ class InferenceEngine:
             lambda p, fe: encoder_cross_cache(p, cfg, fe)
         )
         self._chunk_probe_fn = None  # non-donating twin of _chunk (calibration)
-        self._fresh_cache = jax.jit(
-            lambda: init_params(
-                cache_defs(cfg, batch=self.sc.max_batch, max_len=self.sc.max_len),
-                jax.random.PRNGKey(0),
-            )
-        )
+        # physical cache rows per slot: the admission bound plus the
+        # speculative verify slack (see ServeConfig.spec_slack)
+        self.capacity = self.sc.max_len + self.sc.spec_slack
 
     def _frontend_stub(self, batch: int):
         cfg = self.cfg
@@ -120,7 +127,7 @@ class InferenceEngine:
         assert b <= self.sc.max_batch and s0 + new_tokens <= self.sc.max_len
         fe = self._frontend_stub(b)
         logits, cache = self._prefill(self.params, jnp.asarray(prompts), fe)
-        cache = self._grow_cache(cache, s0)
+        cache = grow_cache(self.cfg, cache, self.capacity)
         out = np.zeros((b, new_tokens), np.int32)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         for i in range(new_tokens):
@@ -129,14 +136,10 @@ class InferenceEngine:
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         return out
 
-    def _grow_cache(self, cache: dict, s0: int):
-        """Pad prefill-produced seq-dim caches out to max_len capacity."""
-        return grow_cache(self.cfg, cache, self.sc.max_len)
-
     # -- continuous-batching execution path ---------------------------------
     def make_pool(self) -> SlotPool:
         return SlotPool(self.cfg, max_batch=self.sc.max_batch,
-                        max_len=self.sc.max_len)
+                        max_len=self.sc.max_len, slack=self.sc.spec_slack)
 
     def prefill_into_slot(self, pool: SlotPool, slot: int, prompt: np.ndarray,
                           *, rid: int, budget: int) -> int:
@@ -154,7 +157,7 @@ class InferenceEngine:
                              f"max_len {self.sc.max_len}")
         logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None],
                                       self._frontend_stub(1))
-        cache = grow_cache(self.cfg, cache, self.sc.max_len)
+        cache = grow_cache(self.cfg, cache, self.capacity)
         first = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
         pool.admit(slot, cache, rid=rid, pos=s0, budget=budget, first_tok=first)
         return first
@@ -195,6 +198,63 @@ class InferenceEngine:
 
         return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(cache, tok, pos)
 
+    # -- speculative multi-token decode --------------------------------------
+    def masked_speculative_step(self, pool: SlotPool,
+                                drafts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """One speculative verify tick over the whole pool.
+
+        ``drafts``: (max_batch, K) int32 candidate tokens per slot (garbage
+        for non-decoding slots). A single jitted pass scores every slot's
+        K+1 window (its next decode input + the K drafts) at the slot's own
+        position via ``decode_verify`` and commits each slot's cache to its
+        greedily-accepted prefix in-device. Returns
+
+          tokens:   (max_batch, K+1) int32 — the greedy token after each
+                    window position; entries for non-decoding slots garbage
+          accepted: (max_batch,) int32 — accepted drafts a ∈ [0, K]; the
+                    tick's emission for a slot is tokens[:a+1] (a accepted
+                    drafts + the bonus token), and tokens[a] is the slot's
+                    next decode input
+
+        Host-side slot bookkeeping (``SlotPool.advance``, retirement, budget
+        truncation) stays the scheduler's job, exactly like masked decode.
+        """
+        drafts = np.asarray(drafts, np.int32)
+        k = drafts.shape[1]
+        assert drafts.shape == (pool.max_batch, k) and k >= 1
+        assert pool.slack >= k, (
+            f"speculative verify of {k} drafts needs spec_slack >= {k} "
+            f"spare cache rows (have {pool.slack}) — see ServeConfig.spec_slack")
+        (toks, acc), pool.cache = self._masked_verify(
+            self.params, pool.cache, jnp.asarray(pool.tok), jnp.asarray(drafts),
+            jnp.asarray(pool.positions()), jnp.asarray(pool.decode_mask()),
+        )
+        return np.asarray(toks), np.asarray(acc)
+
+    def _masked_verify_impl(self, params, cache, tok, drafts, pos, active):
+        """vmapped per-slot verify: every slot scores its own K+1 window.
+
+        Greedy acceptance is exact prefix match against the verify argmaxes,
+        so accepted output is token-for-token what plain masked decode would
+        emit; the cache commit (``commit_verify``) happens inside the same
+        jit, before the donated cache is returned."""
+        cfg = self.cfg
+        pos = jnp.where(active, pos, 0)
+        tokens = jnp.concatenate([tok[:, None], drafts], axis=1)  # (B, K+1)
+
+        def one(cache_b, toks_b, pos_b):
+            c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1), cache_b)
+            logits, c1 = decode_verify(params, c1, toks_b[None, :], pos_b, cfg)
+            g = jnp.argmax(logits[0, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+            # accept the longest prefix of drafts matching the greedy chain
+            ok = jnp.cumprod((toks_b[1:] == g[:-1]).astype(jnp.int32))
+            a = jnp.sum(ok).astype(jnp.int32)
+            c1 = commit_verify(c1, a, cfg)
+            return (g, a), jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
+
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=((0, 0), 1))(
+            cache, tokens, pos)
+
     # -- chunked prefill ------------------------------------------------------
     def begin_chunked_prefill(self, pool: SlotPool, slots: list[int],
                               prompts: np.ndarray, *, rids: list[int],
@@ -219,7 +279,7 @@ class InferenceEngine:
             if not pool.admitting[slot]:  # the scheduler may have reserved already
                 pool.reserve(slot, rid=rid)
         cache = init_params(
-            cache_defs(self.cfg, batch=k, max_len=self.sc.max_len),
+            cache_defs(self.cfg, batch=k, max_len=self.capacity),
             jax.random.PRNGKey(0),
         )
         if self.cfg.family == "audio":
@@ -236,7 +296,7 @@ class InferenceEngine:
         every chunk can slice it at its offset (built once per group)."""
         if self.cfg.family != "vlm":
             return None
-        return jnp.zeros((batch, self.sc.max_len, self.cfg.d_model), self.cfg.dtype)
+        return jnp.zeros((batch, self.capacity, self.cfg.d_model), self.cfg.dtype)
 
     def chunk_step_probe(self, batch: int, chunk_tokens: int):
         """Zero-arg callable running ONE representative chunked-prefill step
@@ -253,7 +313,7 @@ class InferenceEngine:
                 )
             )
         cache = init_params(
-            cache_defs(self.cfg, batch=batch, max_len=self.sc.max_len),
+            cache_defs(self.cfg, batch=batch, max_len=self.capacity),
             jax.random.PRNGKey(0),
         )
         toks = jnp.zeros((batch, chunk_tokens), jnp.int32)

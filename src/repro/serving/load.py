@@ -36,16 +36,29 @@ class Request:
 
 def _materialize(arrivals: np.ndarray, *, seed: int, vocab_size: int,
                  prompt_lens: tuple[int, ...], new_tokens: tuple[int, int],
-                 deadline_s: float | None) -> list[Request]:
+                 deadline_s: float | None,
+                 prompt_period: int | None = None) -> list[Request]:
     rng = np.random.default_rng(seed + 1)
     n = arrivals.size
     lens = rng.choice(np.asarray(prompt_lens), size=n)
     budgets = rng.integers(new_tokens[0], new_tokens[1] + 1, size=n)
+
+    def prompt(i):
+        if prompt_period:
+            # REPETITIVE prompts: a per-request base pattern tiled out to the
+            # prompt length — the templated/structured serving regime
+            # (code, form letters, logs) that self-speculative drafting
+            # exploits; still i.i.d. random across requests
+            pat = rng.integers(0, vocab_size, prompt_period)
+            reps = -(-int(lens[i]) // prompt_period)
+            return np.tile(pat, reps)[: lens[i]].astype(np.int32)
+        return rng.integers(0, vocab_size, lens[i]).astype(np.int32)
+
     return [
         Request(
             rid=i,
             arrival_s=float(arrivals[i]),
-            prompt=rng.integers(0, vocab_size, lens[i]).astype(np.int32),
+            prompt=prompt(i),
             new_tokens=int(budgets[i]),
             deadline_s=deadline_s,
         )
@@ -56,13 +69,14 @@ def _materialize(arrivals: np.ndarray, *, seed: int, vocab_size: int,
 def poisson_stream(n: int, *, rate_hz: float, seed: int = 0,
                    vocab_size: int = 256, prompt_lens: tuple[int, ...] = (4, 8, 16),
                    new_tokens: tuple[int, int] = (4, 16),
-                   deadline_s: float | None = None) -> list[Request]:
+                   deadline_s: float | None = None,
+                   prompt_period: int | None = None) -> list[Request]:
     """Homogeneous Poisson arrivals at ``rate_hz`` requests/second."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
     return _materialize(arrivals, seed=seed, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, new_tokens=new_tokens,
-                        deadline_s=deadline_s)
+                        deadline_s=deadline_s, prompt_period=prompt_period)
 
 
 def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
@@ -70,7 +84,8 @@ def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
                   seed: int = 0, vocab_size: int = 256,
                   prompt_lens: tuple[int, ...] = (4, 8, 16),
                   new_tokens: tuple[int, int] = (4, 16),
-                  deadline_s: float | None = None) -> list[Request]:
+                  deadline_s: float | None = None,
+                  prompt_period: int | None = None) -> list[Request]:
     """Markov-modulated arrivals: geometric bursts at ``fast_rate_hz``
     separated by geometric quiets at ``slow_rate_hz`` (starts in a burst)."""
     gaps = mmpp_gaps(np.random.default_rng(seed), n, p_leave_busy=p_leave_burst,
@@ -78,14 +93,15 @@ def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
                      slow_scale=1.0 / slow_rate_hz)
     return _materialize(np.cumsum(gaps), seed=seed, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, new_tokens=new_tokens,
-                        deadline_s=deadline_s)
+                        deadline_s=deadline_s, prompt_period=prompt_period)
 
 
 def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
                               prompt_lens: tuple[int, ...] = (4, 8),
                               new_tokens: tuple[int, int] = (8, 32),
                               burst_factor: float = 3.0,
-                              quiet_factor: float = 0.02) -> list[Request]:
+                              quiet_factor: float = 0.02,
+                              prompt_period: int | None = None) -> list[Request]:
     """Bursty stream with rates scaled from a calibration's measured costs:
     sustained bursts (mean ~20 requests) at ``burst_factor``× the mean
     service rate — genuine queue pressure, the regime continuous batching
@@ -98,7 +114,7 @@ def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
                          slow_rate_hz=quiet_factor / service,
                          p_leave_burst=0.05, seed=seed,
                          vocab_size=vocab_size, prompt_lens=prompt_lens,
-                         new_tokens=new_tokens)
+                         new_tokens=new_tokens, prompt_period=prompt_period)
 
 
 def mean_service_s(cal, *, prompt_len: int = 8, mean_tokens: int = 12) -> float:
@@ -111,7 +127,8 @@ def diurnal_stream(n: int, *, base_rate_hz: float, peak_rate_hz: float,
                    period_s: float, seed: int = 0, vocab_size: int = 256,
                    prompt_lens: tuple[int, ...] = (4, 8, 16),
                    new_tokens: tuple[int, int] = (4, 16),
-                   deadline_s: float | None = None) -> list[Request]:
+                   deadline_s: float | None = None,
+                   prompt_period: int | None = None) -> list[Request]:
     """Rate-varying Poisson, λ(t) = base + (peak-base)·(1+sin(2πt/T))/2,
     sampled by Lewis–Shedler thinning against the peak rate."""
     assert peak_rate_hz >= base_rate_hz > 0
@@ -130,4 +147,4 @@ def diurnal_stream(n: int, *, base_rate_hz: float, peak_rate_hz: float,
     arrivals = np.asarray(arrivals[:n])
     return _materialize(arrivals, seed=seed, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, new_tokens=new_tokens,
-                        deadline_s=deadline_s)
+                        deadline_s=deadline_s, prompt_period=prompt_period)

@@ -14,7 +14,13 @@ Scheduler states → the paper's strategy taxonomy (§3.2):
              amortized equally over the active slots. Partial occupancy is
              the *continuous* analogue of Slow-Down: the linear idle→peak
              power model charges a half-empty pool roughly the static floor
-             the paper's clock-stretching pays.
+             the paper's clock-stretching pays. With ``speculate_k=K`` the
+             tick is SPECULATIVE: an n-gram drafter proposes K candidates
+             per slot, one batched verify pass scores every slot's K+1
+             window, and each slot commits its greedily-accepted prefix —
+             several tokens per tick on repetitive output, with the tick
+             charged as one step plus a per-candidate increment and
+             amortized over the slots by tokens committed.
   PREFILL    an admission in flight — compute-dense, charged at full
              utilization, billed to the admitted request's ledger. With
              ``prefill_chunk`` set, admission is CHUNKED: a FIFO group of
@@ -50,6 +56,7 @@ import numpy as np
 
 from repro.core.energy import DEFAULT_CHIP, TPUChip
 from repro.core.workload import AccelProfile, SimResult
+from repro.serving.draft import NgramDrafter
 from repro.serving.engine import ChunkedPrefillState, InferenceEngine, tpu_reload_costs
 from repro.serving.load import Request
 from repro.serving.policy import DutyCyclePolicy, make_policy
@@ -73,6 +80,7 @@ class EngineCalibration:
         self.repeats = repeats
         self._prefill: dict[tuple[int, int], float] = {}
         self._chunkt: dict[tuple[int, int], float] = {}
+        self._verify: dict[int, float] = {}
         self._step: float | None = None
 
     def _time(self, fn) -> float:
@@ -112,15 +120,29 @@ class EngineCalibration:
             self._step = self._time(lambda: eng.masked_decode_step(pool))
         return self._step
 
+    def verify_s(self, k: int) -> float:
+        """One speculative verify tick (K drafts, full pool) — timed on the
+        real K+1-window jit, not extrapolated from the single-token step."""
+        if k not in self._verify:
+            eng = self.engine
+            pool = eng.make_pool()
+            pool.active[:] = True
+            drafts = np.zeros((pool.max_batch, k), np.int32)
+            self._verify[k] = self._time(
+                lambda: eng.masked_speculative_step(pool, drafts))
+        return self._verify[k]
+
 
 class FixedCalibration:
     """Preset costs — deterministic scheduler runs without any engine."""
 
     def __init__(self, *, step_s: float, prefill_base_s: float = 0.0,
-                 prefill_per_tok_s: float = 0.0):
+                 prefill_per_tok_s: float = 0.0,
+                 verify_per_tok_s: float = 0.0):
         self._step = step_s
         self.base = prefill_base_s
         self.per_tok = prefill_per_tok_s
+        self.verify_per_tok = verify_per_tok_s
 
     def prefill_s(self, batch: int, s0: int) -> float:
         return self.base + self.per_tok * batch * s0
@@ -130,6 +152,12 @@ class FixedCalibration:
 
     def step_s(self) -> float:
         return self._step
+
+    def verify_s(self, k: int) -> float:
+        """Verify tick = one decode step + a per-candidate increment: the
+        masked step is weight-bound, so K extra in-flight positions ride the
+        same weight reads and only add activation/attention work."""
+        return self._step + k * self.verify_per_tok
 
 
 # ---------------------------------------------------------------------------
@@ -161,10 +189,18 @@ class ServeReport:
     reloads: int
     missed: int
     chunks: int = 0  # prefill chunks processed (chunked admission only)
+    verify_ticks: int = 0      # speculative verify passes (speculative only)
+    accepted_tokens: int = 0   # tokens committed by those passes
 
     @property
     def items(self) -> int:
         return len(self.records)
+
+    @property
+    def accepted_per_tick(self) -> float:
+        """Mean tokens committed per speculative verify tick (>= 1 by
+        construction; > 1 is the speedup speculation exists for)."""
+        return self.accepted_tokens / self.verify_ticks if self.verify_ticks else 0.0
 
     @property
     def items_per_joule(self) -> float:
@@ -188,6 +224,9 @@ class ServeReport:
 
     def summary(self) -> str:
         extra = f" chunks={self.chunks}" if self.chunks else ""
+        if self.verify_ticks:
+            extra += (f" verify={self.verify_ticks} "
+                      f"acc/tick={self.accepted_per_tick:.2f}")
         return (f"{self.mode:11s} items={self.items} items/J={self.items_per_joule:.5f} "
                 f"p50={self.p50_s * 1e3:.1f}ms p99={self.p99_s * 1e3:.1f}ms "
                 f"reloads={self.reloads} missed={self.missed}{extra}")
@@ -225,6 +264,19 @@ class ContinuousBatchingScheduler:
     pool. Both paths emit token-for-token identical outputs: the decode step
     is per-slot independent, so tokens depend only on each request's own
     prefilled cache.
+
+    ``speculate_k=K`` turns decode ticks SPECULATIVE: a per-slot drafter
+    (default ``NgramDrafter`` — suffix lookup over each request's own
+    prompt + emitted tokens, no extra weights) proposes K candidates per
+    decoding slot and ONE batched ``masked_speculative_step`` scores every
+    slot's K+1 window, committing each slot's greedily-accepted prefix with
+    a variable ``SlotPool.advance``. Acceptance is exact greedy match, so
+    speculative output is token-for-token identical to plain masked decode
+    — wrong drafts cost only the per-candidate verify increment, and the
+    accept-0 floor still commits one token per tick. Composes with chunked
+    admission (slots whose prefill is in flight stay out of the verify
+    mask). Verify energy is charged per tick at measured occupancy and
+    amortized over the slots by tokens committed.
     """
 
     def __init__(self, engine: InferenceEngine, *,
@@ -232,28 +284,42 @@ class ContinuousBatchingScheduler:
                  chip: TPUChip = DEFAULT_CHIP, chips: int = 1,
                  execute: bool = True, calibration=None,
                  prefill_util: float = 1.0, prefill_chunk: int | None = None,
+                 speculate_k: int | None = None, drafter=None,
                  policy_kw: dict | None = None):
         if not execute and calibration is None:
             raise ValueError("execute=False needs an explicit calibration")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if speculate_k is not None and speculate_k < 1:
+            raise ValueError(f"speculate_k must be >= 1, got {speculate_k}")
+        if speculate_k and execute and engine.sc.spec_slack < speculate_k:
+            raise ValueError(
+                f"speculate_k={speculate_k} needs an engine with "
+                f"ServeConfig.spec_slack >= {speculate_k} spare cache rows "
+                f"(have {engine.sc.spec_slack})")
         self.engine = engine
         self.chip = chip
         self.chips = chips
         self.execute = execute
         self.prefill_util = prefill_util
         self.prefill_chunk = prefill_chunk
+        self.speculate_k = speculate_k
+        self.drafter = (drafter if drafter is not None
+                        else NgramDrafter(speculate_k) if speculate_k else None)
         self.cal = calibration if calibration is not None else EngineCalibration(engine)
         sc = engine.sc
         self.pool = (engine.make_pool() if execute else
                      SlotPool(engine.cfg, max_batch=sc.max_batch,
-                              max_len=sc.max_len, virtual=True))
+                              max_len=sc.max_len, virtual=True,
+                              slack=sc.spec_slack))
         self.profile = _tpu_profile(self.cal.step_s(), chip, chips, engine.cfg)
         self.policy = (policy if isinstance(policy, DutyCyclePolicy)
                        else make_policy(policy, self.profile, **(policy_kw or {})))
         self.admitted = 0
         self.completed = 0
         self.chunks = 0
+        self.verify_ticks = 0
+        self.accepted_tokens = 0
 
     # -- one request's terminal bookkeeping ---------------------------------
     def _maybe_finish(self, slot: int, rec: RequestRecord, t: float,
@@ -264,9 +330,12 @@ class ContinuousBatchingScheduler:
             rec.missed = deadline_s is not None and rec.latency_s > deadline_s
             self.pool.retire(slot)
             self.completed += 1
+            if self.drafter is not None:
+                self.drafter.forget(rec.rid)
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
-        mode = "chunked" if self.prefill_chunk else "continuous"
+        mode = ("speculative" if self.speculate_k
+                else "chunked" if self.prefill_chunk else "continuous")
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         if not reqs:
             return ServeReport(mode, [], 0.0, 0.0, 0, 0)
@@ -281,6 +350,7 @@ class ContinuousBatchingScheduler:
                 for r in reqs}
         deadlines = {r.rid: r.deadline_s for r in reqs}
         self.admitted = self.completed = self.chunks = 0
+        self.verify_ticks = self.accepted_tokens = 0
         self.policy.busy_s.clear()  # per-run ledger (τ estimator state persists)
         n = len(reqs)
         pool, chip, chips = self.pool, self.chip, self.chips
@@ -319,6 +389,8 @@ class ContinuousBatchingScheduler:
                     self.policy.on_busy("prefill", tp)
                     rec.energy_j += chip.step_power(self.prefill_util) * chips * tp
                     rec.tokens.append(first)
+                    if self.drafter is not None:
+                        self.drafter.begin(r.rid, list(r.prompt) + [first])
                     self.admitted += 1
                     i += 1
                     self._maybe_finish(slot, rec, t, deadlines[r.rid])
@@ -378,10 +450,53 @@ class ContinuousBatchingScheduler:
                     for j, rid in enumerate(group.rids):
                         rec = recs[rid]
                         rec.tokens.append(int(first[j]))
+                        if self.drafter is not None:
+                            self.drafter.begin(
+                                rid, list(group.prompts[j]) + [int(first[j])])
                         self._maybe_finish(group.slots[j], rec, t, deadlines[rid])
                     group = None
 
-            if pool.decoding_count:
+            if pool.decoding_count and self.speculate_k:
+                # SPECULATIVE DECODING: draft K candidates per decoding slot
+                # (admitting slots stay out of the verify mask), score every
+                # slot's K+1 window in ONE verify pass, commit the accepted
+                # prefixes. The tick is charged like a decode step plus the
+                # per-candidate increment, amortized by tokens committed.
+                k = self.speculate_k
+                decoding = pool.decoding_slots()
+                drafts = np.zeros((pool.max_batch, k), np.int32)
+                for slot in decoding:
+                    drafts[slot] = self.drafter.propose(pool.slots[slot].rid)
+                if self.execute:
+                    toks, acc = self.engine.masked_speculative_step(pool, drafts)
+                else:  # the virtual model's greedy chain is all zeros
+                    toks = np.zeros((pool.max_batch, k + 1), np.int32)
+                    acc = np.cumprod(drafts == 0, axis=1).sum(axis=1)
+                ts = self.cal.verify_s(k)
+                t += ts
+                self.verify_ticks += 1
+                self.policy.on_busy("verify", ts)
+                util = len(decoding) / pool.max_batch
+                tick_e = chip.step_power(util) * chips * ts
+                # a slot never overshoots its budget: acceptance past the
+                # remaining budget is truncated and the slot retires mid-verify
+                emit = {s: min(int(acc[s]) + 1,
+                               pool.slots[s].budget - pool.slots[s].emitted)
+                        for s in decoding}
+                total = sum(emit.values())
+                for slot in decoding:
+                    n_tok = emit[slot]
+                    info = pool.slots[slot]
+                    out = toks[slot, :n_tok].tolist()
+                    pool.advance(slot, n_tok, int(toks[slot, n_tok - 1]))
+                    self.drafter.observe(info.rid, out)
+                    rec = recs[info.rid]
+                    rec.tokens.extend(out)
+                    rec.energy_j += tick_e * n_tok / total
+                    self.accepted_tokens += n_tok
+                    self._maybe_finish(slot, rec, t, deadlines[info.rid])
+                progressed = True
+            elif pool.decoding_count:
                 # DECODING: one masked step over the pool at measured occupancy
                 ts = self.cal.step_s()
                 util = pool.decoding_count / pool.max_batch
@@ -392,9 +507,7 @@ class ContinuousBatchingScheduler:
                 share = chip.step_power(util) * chips * ts / pool.decoding_count
                 for slot in pool.decoding_slots():
                     info = pool.slots[slot]
-                    info.pos += 1
-                    info.emitted += 1
-                    pool.tok[slot] = nxt[slot]
+                    pool.advance(slot, 1, int(nxt[slot]))
                     rec = recs[info.rid]
                     rec.tokens.append(int(nxt[slot]))
                     rec.energy_j += share
@@ -420,7 +533,9 @@ class ContinuousBatchingScheduler:
                   + sum(rec.energy_j for rec in records) + gap_energy)
         makespan = max(rec.finish_s for rec in records) - reqs[0].arrival_s
         return ServeReport(mode, records, energy, makespan, reloads,
-                           sum(rec.missed for rec in records), chunks=self.chunks)
+                           sum(rec.missed for rec in records), chunks=self.chunks,
+                           verify_ticks=self.verify_ticks,
+                           accepted_tokens=self.accepted_tokens)
 
 
 # ---------------------------------------------------------------------------

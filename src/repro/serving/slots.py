@@ -80,18 +80,34 @@ class SlotInfo:
 
 
 class SlotPool:
-    """Fixed pool of decode slots over one shared device cache."""
+    """Fixed pool of decode slots over one shared device cache.
+
+    ``slack`` adds dead cache rows past ``max_len``: a speculative verify
+    window of K+1 tokens may start as late as position max_len-2, and
+    without the spare rows its tail writes would clamp (dynamic_update_slice
+    shifts the whole window) and corrupt live positions. The admission
+    bound stays ``max_len``; slack rows only ever hold rejected candidates.
+    """
 
     def __init__(self, cfg: ArchConfig, *, max_batch: int, max_len: int,
-                 virtual: bool = False):
+                 virtual: bool = False, slack: int = 0):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
+        self.slack = slack
+        self.capacity = max_len + slack
         # virtual pools carry only the host-side bookkeeping (scheduler
         # studies with FixedCalibration — no device cache, no engine)
         self.cache = None if virtual else init_params(
-            cache_defs(cfg, batch=max_batch, max_len=max_len), jax.random.PRNGKey(0)
+            cache_defs(cfg, batch=max_batch, max_len=self.capacity),
+            jax.random.PRNGKey(0),
         )
+        # accepted-token accounting: tokens committed through ``advance``
+        # (every decode/verify tick), and how many were drafted — the
+        # above-one-per-tick surplus speculation exists for (0 under plain
+        # decode, whose ticks are the n=1 special case)
+        self.committed = 0
+        self.drafted = 0
         self.slots = [SlotInfo() for _ in range(max_batch)]
         self.active = np.zeros(max_batch, bool)       # slot occupied at all
         self.admitting = np.zeros(max_batch, bool)    # reserved, prefill in flight
@@ -196,6 +212,21 @@ class SlotPool:
         self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
         self.admitting[slot] = False
         self.tok[slot] = first_tok
+
+    def advance(self, slot: int, n: int, next_tok: int) -> None:
+        """Commit ``n`` emitted tokens to a decoding slot in one move — the
+        variable-advance a speculative verify tick needs; a plain decode
+        tick is the n=1 special case. ``next_tok`` is the new next decode
+        input (the verify bonus token, or the truncation point at budget
+        end)."""
+        assert n >= 1
+        info = self.slots[slot]
+        assert self.active[slot] and not self.admitting[slot]
+        info.pos += n
+        info.emitted += n
+        self.tok[slot] = next_tok
+        self.committed += n
+        self.drafted += n - 1
 
     def retire(self, slot: int) -> None:
         assert self.active[slot], f"slot {slot} not active"
