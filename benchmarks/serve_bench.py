@@ -33,6 +33,15 @@ continuations put the ledger in the decode-bound regime where the drafter's
 accepted-token surplus turns into items/J. Archs with chaotic reduced
 outputs accept ~0 drafts and degrade to the ≥1-token-per-tick floor.
 
+A second scenario, ``serve_overload_robustness``, drives a flash-crowd
+overload (one spike window arriving far beyond pool capacity, every request
+carrying a latency deadline) through the same engine three ways: serve
+everything, deadline-aware admission control (``shed=True``), and shedding
+under a seeded fault profile (NaN slot poisoning + stall ticks) with
+quarantine-and-retry. Gated: shedding must not lose on-time completions per
+joule vs serving everything, and every non-shed request must complete under
+the fault profile.
+
 Reported per mode: items/J, p50/p99 latency, reloads, accepted/tick;
 headline ratios go into the BENCH_<timestamp>.json artifact (via
 benchmarks/run.py, or standalone: ``python benchmarks/serve_bench.py
@@ -47,7 +56,8 @@ import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.serving.engine import InferenceEngine, ServeConfig
-from repro.serving.load import bursty_stream
+from repro.serving.faults import make_profile
+from repro.serving.load import bursty_stream, flash_crowd_stream
 from repro.serving.scheduler import (
     ContinuousBatchingScheduler,
     FixedCalibration,
@@ -67,6 +77,9 @@ PROMPT_LENS = (4, 8)    # short prompts: the stream is DECODE-dominated
 NEW_TOKENS = (32, 80)   # long continuations — the regime where per-token
                         # decode latency (not prefill) bounds items/J
 PROMPT_PERIOD = 4       # repetitive (templated) prompts — see load.py
+# overload scenario: shorter budgets keep the three extra runs cheap while
+# the spike still drives queueing delay far past the deadline
+OVERLOAD_NEW_TOKENS = (8, 24)
 
 
 def run(arch: str = "whisper-tiny", n: int = 96, max_batch: int = 8,
@@ -138,6 +151,77 @@ def run(arch: str = "whisper-tiny", n: int = 96, max_batch: int = 8,
     }
 
 
+def run_overload(arch: str = "whisper-tiny", n: int = 64, max_batch: int = 8,
+                 seed: int = 0, execute: bool = True,
+                 fault_spec: str = "light") -> dict:
+    """Flash-crowd overload with deadlines: serve-everything vs deadline-aware
+    shedding vs shedding under a seeded fault profile. The gated claims:
+    shedding turns at least as much energy into ON-TIME completions as
+    serving everything (``shed_goodput_per_j_gain`` >= 1), and under faults
+    every request admission control keeps is still completed by
+    quarantine-and-retry (``fault_completed_frac`` == 1, no failures)."""
+    cfg = get_reduced_config(arch)
+    engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=max_batch,
+                                                 max_len=96))
+    cal = FixedCalibration(step_s=STEP_S, prefill_base_s=PREFILL_BASE_S,
+                           prefill_per_tok_s=PREFILL_TOK_S,
+                           verify_per_tok_s=VERIFY_TOK_S)
+    service = (PREFILL_BASE_S + PREFILL_TOK_S * float(np.mean(PROMPT_LENS))
+               + float(np.mean(OVERLOAD_NEW_TOKENS)) * STEP_S)
+    # the spike arrives ~4x faster than the pool can drain; the deadline
+    # admits a modest queue but not the spike's full backlog
+    deadline = 4.0 * service
+    reqs = flash_crowd_stream(n, base_rate_hz=0.5 / service,
+                              spike_rate_hz=4.0 * max_batch / service,
+                              spike_start_s=4.0 * service,
+                              spike_len_s=8.0 * service, seed=seed,
+                              vocab_size=cfg.vocab_size,
+                              prompt_lens=PROMPT_LENS,
+                              new_tokens=OVERLOAD_NEW_TOKENS,
+                              deadline_s=deadline,
+                              prompt_period=PROMPT_PERIOD)
+    kw = dict(policy="adaptive", execute=execute, calibration=cal)
+    noshed = ContinuousBatchingScheduler(engine, **kw).run(reqs)
+    shedr = ContinuousBatchingScheduler(engine, shed=True, **kw).run(reqs)
+    faults = make_profile(fault_spec, seed=seed)
+    frep = ContinuousBatchingScheduler(engine, shed=True, faults=faults,
+                                       **kw).run(reqs)
+    print(f"\n{arch}: flash-crowd overload, {n} requests, "
+          f"deadline={deadline * 1e3:.0f} ms, pool={max_batch}, "
+          f"faults={fault_spec}")
+    for label, rep in (("serve-all", noshed), ("shed", shedr),
+                       ("shed+faults", frep)):
+        print(f"  [{label:11s}] " + rep.summary())
+    gain = shedr.goodput_per_joule / noshed.goodput_per_joule
+    completed_frac = frep.items / max(n - frep.shed, 1)
+    print(f"  shedding vs serve-everything: {gain:.2f}x on-time items/J "
+          f"({shedr.shed} shed, {shedr.missed} vs {noshed.missed} missed)")
+    print(f"  under faults: {completed_frac * 100:.0f}% of admitted requests "
+          f"completed ({frep.quarantined} quarantined, {frep.retried} "
+          f"retried, {frep.failed} failed)")
+    return {
+        "deadline_ms": deadline * 1e3,
+        "noshed_goodput_per_j": noshed.goodput_per_joule,
+        "noshed_missed": noshed.missed,
+        "noshed_wasted_j": noshed.wasted_energy_j,
+        "shed_goodput_per_j": shedr.goodput_per_joule,
+        "shed_goodput_per_j_gain": gain,
+        "shed_count": shedr.shed,
+        "shed_missed": shedr.missed,
+        "shed_items": shedr.items,
+        "shed_wasted_j": shedr.wasted_energy_j,
+        "fault_goodput_per_j": frep.goodput_per_joule,
+        "fault_completed_frac": completed_frac,
+        "fault_items": frep.items,
+        "fault_shed": frep.shed,
+        "fault_quarantined": frep.quarantined,
+        "fault_retried": frep.retried,
+        "fault_failed": frep.failed,
+        "fault_stragglers": frep.stragglers,
+        "fault_wasted_j": frep.wasted_energy_j,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small stream (CI smoke)")
@@ -149,6 +233,9 @@ def main(argv=None) -> int:
     ap.add_argument("--speculate-k", type=int, default=6,
                     help="drafted candidates per speculative verify tick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-profile", default="light",
+                    help="fault profile for the overload scenario "
+                         "(none/light/heavy or a spec string)")
     ap.add_argument("--no-execute", action="store_true",
                     help="virtual pools only (ledger unchanged, no real tokens)")
     ap.add_argument("--out", default=".", help="directory for the BENCH_*.json artifact")
@@ -159,6 +246,10 @@ def main(argv=None) -> int:
     derived = run(arch=args.arch, n=n, max_batch=batch, chunk=args.chunk,
                   speculate_k=args.speculate_k, seed=args.seed,
                   execute=not args.no_execute)
+    n_over = 40 if args.quick else 64
+    overload = run_overload(arch=args.arch, n=n_over, max_batch=batch,
+                            seed=args.seed, execute=not args.no_execute,
+                            fault_spec=args.fault_profile)
 
     stamp = datetime.now(timezone.utc).strftime("%Y%m%d-%H%M%S")
     out_dir = Path(args.out)
@@ -174,6 +265,13 @@ def main(argv=None) -> int:
             "prefill_chunk": args.chunk,
             "speculate_k": args.speculate_k,
             "derived": {k: float(v) for k, v in derived.items()},
+        }, {
+            "name": "serve_overload_robustness",
+            "arch": args.arch,
+            "n_requests": n_over,
+            "max_batch": batch,
+            "fault_profile": args.fault_profile,
+            "derived": {k: float(v) for k, v in overload.items()},
         }],
     }, indent=1, sort_keys=True))
     print(f"\nwrote {artifact}")

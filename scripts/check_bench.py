@@ -18,6 +18,15 @@ claims as floors:
     speculative_items_per_j_gain speculative items/J vs plain
                                  continuous decode            >= 1.15
 
+  serve_overload_robustness (DETERMINISTIC — same fixed cost model, seeded
+  fault profile):
+    shed_goodput_per_j_gain   on-time completions/J with deadline-aware
+                              shedding vs serving everything      >= 1.0
+    fault_completed_frac      fraction of non-shed requests completed
+                              under the fault profile (quarantine-and-
+                              retry must lose NOTHING admission control
+                              kept)                               >= 1.0
+
   paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
   so the floor is a catastrophic-regression guard, not the real margin; the
   committed full-run artifacts hold the true speedups):
@@ -47,6 +56,10 @@ SERVE_CHECKS = (  # (derived key, floor)
     ("spec_accepted_per_tick", 2.0),
     ("speculative_items_per_j_gain", 1.15),
 )
+OVERLOAD_CHECKS = (
+    ("shed_goodput_per_j_gain", 1.0),
+    ("fault_completed_frac", 1.0),
+)
 LSTM_CHECKS = (
     ("tpu_seq_speedup", 1.0),
     ("tpu_q8_speedup", 1.0),
@@ -54,6 +67,7 @@ LSTM_CHECKS = (
 )
 CHECKS = {
     "serve_continuous_batching": ("tol", SERVE_CHECKS),
+    "serve_overload_robustness": ("tol", OVERLOAD_CHECKS),
     "paper_lstm_C1_C2": ("tol_lstm", LSTM_CHECKS),
 }
 

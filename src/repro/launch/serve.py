@@ -20,12 +20,31 @@ Modes:
   strategies   the offline gap-trace strategy comparison
                (WorkloadAwareServer)
 
+Robustness (any scheduler mode):
+  --fault-profile   inject deterministic faults: a named profile
+                    ("none"/"light"/"heavy") or a spec string like
+                    "nan=0.05,stall=0.02,stallx=8,chunk=0.1,max=20";
+                    poisoned slots are quarantined and retried from their
+                    last committed token, token-for-token identical output
+  --retry-budget    max re-prefills per quarantined request before it is
+                    marked failed (exponential backoff between attempts)
+  --shed            deadline-aware admission control: shed requests the
+                    fixed cost model says cannot finish inside --deadline
+  --deadline        per-request latency deadline in seconds (0 = none);
+                    without --shed, late requests are only counted missed
+  --queue-limit     ready-queue backpressure: shed arrivals beyond this
+                    depth even without deadlines
+  --load flash      flash-crowd stream (baseline Poisson + one overload
+                    spike window) — the shedding stress regime
+
 Examples:
   python -m repro.launch.serve --arch granite-3-8b --load bursty --n 60
   python -m repro.launch.serve --arch granite-3-8b --mode chunked --prefill-chunk 8
   python -m repro.launch.serve --arch whisper-tiny --mode speculative --speculate-k 4
   python -m repro.launch.serve --arch granite-3-8b --mode compare --load poisson
   python -m repro.launch.serve --arch granite-3-8b --mode strategies --trace bursty
+  python -m repro.launch.serve --arch whisper-tiny --load flash --shed --deadline 0.5
+  python -m repro.launch.serve --arch whisper-tiny --fault-profile light --retry-budget 4
 """
 from __future__ import annotations
 
@@ -36,9 +55,12 @@ import numpy as np
 from repro.configs import get_reduced_config, list_archs
 from repro.core.workload import bursty_trace, irregular_trace, regular_trace
 from repro.serving.engine import InferenceEngine, ServeConfig, WorkloadAwareServer
+from repro.core.retry import RestartPolicy
+from repro.serving.faults import make_profile
 from repro.serving.load import (
     bursty_stream_for_service,
     diurnal_stream,
+    flash_crowd_stream,
     mean_service_s,
     poisson_stream,
 )
@@ -63,12 +85,21 @@ def _make_stream(args, cfg, cal):
     kw = dict(seed=args.seed, vocab_size=cfg.vocab_size,
               prompt_lens=(4, 8), new_tokens=(4, 24),
               prompt_period=period or None)
+    deadline = args.deadline if args.deadline > 0 else None
     if args.load == "poisson":
-        return poisson_stream(args.n, rate_hz=0.5 / service, **kw)
+        return poisson_stream(args.n, rate_hz=0.5 / service,
+                              deadline_s=deadline, **kw)
     if args.load == "diurnal":
         return diurnal_stream(args.n, base_rate_hz=0.1 / service,
                               peak_rate_hz=1.0 / service,
-                              period_s=40 * service, **kw)
+                              period_s=40 * service, deadline_s=deadline, **kw)
+    if args.load == "flash":
+        # spike at many-x the pool's service rate: overload by construction
+        return flash_crowd_stream(args.n, base_rate_hz=0.2 / service,
+                                  spike_rate_hz=8.0 * args.batch / service,
+                                  spike_start_s=10 * service,
+                                  spike_len_s=10 * service,
+                                  deadline_s=deadline, **kw)
     return bursty_stream_for_service(cal, args.n, **kw)
 
 
@@ -94,7 +125,23 @@ def main(argv=None) -> int:
                          "acceptance keeps output token-for-token identical "
                          "to plain decode (modes: speculative, compare)")
     ap.add_argument("--load", default="bursty",
-                    choices=("poisson", "bursty", "diurnal"))
+                    choices=("poisson", "bursty", "diurnal", "flash"))
+    ap.add_argument("--fault-profile", default="none",
+                    help="fault injection: a named profile (none/light/heavy) "
+                         "or 'nan=0.05,stall=0.02,stallx=8,chunk=0.1,max=20'")
+    ap.add_argument("--shed", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="deadline-aware admission control: shed requests "
+                         "that cannot finish inside their deadline")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request latency deadline in seconds "
+                         "(0 = no deadline)")
+    ap.add_argument("--retry-budget", type=int, default=-1,
+                    help="max re-prefills per quarantined request before it "
+                         "counts as failed (-1 = scheduler default of 4)")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="shed arrivals once the ready queue holds this many "
+                         "requests (0 = unbounded)")
     ap.add_argument("--policy", default="adaptive",
                     choices=("on_off", "idle_waiting", "slow_down", "adaptive"))
     ap.add_argument("--trace", default="regular",
@@ -141,10 +188,22 @@ def main(argv=None) -> int:
     reqs = _make_stream(args, cfg, cal)
     print(f"{args.arch}: {args.load} stream, {args.n} requests, "
           f"t_step={cal.step_s() * 1e3:.2f} ms, pool={args.batch}")
+    faults = make_profile(args.fault_profile, seed=args.seed)
+    retry = None
+    if args.retry_budget >= 0:
+        step = cal.step_s()
+        retry = RestartPolicy(max_restarts=args.retry_budget,
+                              backoff_s=2 * step, backoff_factor=2.0,
+                              max_backoff_s=64 * step)
+    robust = dict(shed=args.shed,
+                  queue_limit=args.queue_limit or None,
+                  faults=faults if faults.enabled else None,
+                  retry=retry)
     sched = ContinuousBatchingScheduler(
         engine, policy=args.policy, chips=args.chips, calibration=cal,
         prefill_chunk=args.prefill_chunk if args.mode == "chunked" else None,
-        speculate_k=args.speculate_k if args.mode == "speculative" else None)
+        speculate_k=args.speculate_k if args.mode == "speculative" else None,
+        **robust)
     rep = sched.run(reqs)
     print("  " + rep.summary())
     tau = sched.policy.tau
@@ -154,11 +213,11 @@ def main(argv=None) -> int:
     if args.mode == "compare":
         chkd = ContinuousBatchingScheduler(
             engine, policy=args.policy, chips=args.chips, calibration=cal,
-            prefill_chunk=args.prefill_chunk).run(reqs)
+            prefill_chunk=args.prefill_chunk, **robust).run(reqs)
         print("  " + chkd.summary())
         spec = ContinuousBatchingScheduler(
             engine, policy=args.policy, chips=args.chips, calibration=cal,
-            speculate_k=args.speculate_k).run(reqs)
+            speculate_k=args.speculate_k, **robust).run(reqs)
         print("  " + spec.summary())
         stat = run_static_batches(engine, reqs, policy=args.policy,
                                   chips=args.chips, calibration=cal,

@@ -113,3 +113,79 @@ class NgramDrafter:
                 out.append(out[-1])
             return out
         return None
+
+
+class SpecThrottle:
+    """Per-request speculation auto-throttle: graceful degradation when
+    drafting stops paying.
+
+    Speculation is a bet — each tick verifies k extra positions, and an
+    acceptance stall (a request whose output stopped being locally
+    repetitive) turns the whole window into wasted verify energy. The
+    throttle tracks an acceptance-rate EMA per request and HALVES the
+    request's draft window each time the EMA falls below ``lo``; windows
+    regrow by doubling once the EMA recovers above ``hi``. A throttled-to-0
+    request periodically probes with a 1-draft window (every
+    ``probe_every`` ticks) so a request whose output turns repetitive again
+    can re-earn its window.
+
+    The hysteresis band (lo < hi) keeps the window from flapping, and
+    windows move in powers of two so the engine's K-keyed verify jit sees at
+    most log2(k_max) distinct signatures. State is keyed by rid like the
+    drafter; ``forget`` drops finished requests.
+    """
+
+    def __init__(self, k_max: int, *, lo: float = 0.2, hi: float = 0.5,
+                 alpha: float = 0.3, probe_every: int = 8):
+        if k_max < 1:
+            raise ValueError(f"k_max must be >= 1, got {k_max}")
+        if not 0.0 <= lo < hi <= 1.0:
+            raise ValueError(f"need 0 <= lo < hi <= 1, got lo={lo} hi={hi}")
+        self.k_max = k_max
+        self.lo = lo
+        self.hi = hi
+        self.alpha = alpha
+        self.probe_every = probe_every
+        self._k: dict[int, int] = {}       # current window per rid
+        self._ema: dict[int, float] = {}   # acceptance-rate EMA per rid
+        self._idle: dict[int, int] = {}    # ticks spent throttled-to-0
+
+    def begin(self, rid: int) -> None:
+        self._k[rid] = self.k_max
+        self._ema[rid] = 1.0  # optimistic start: earn the full window
+        self._idle[rid] = 0
+
+    def forget(self, rid: int) -> None:
+        self._k.pop(rid, None)
+        self._ema.pop(rid, None)
+        self._idle.pop(rid, None)
+
+    def window(self, rid: int) -> int:
+        """Draft tokens this request should field this tick, in [0, k_max].
+        0 means the request is plain-decode until its next probe."""
+        k = self._k.get(rid, self.k_max)
+        if k == 0:
+            self._idle[rid] = self._idle.get(rid, 0) + 1
+            if self._idle[rid] >= self.probe_every:
+                self._idle[rid] = 0
+                return 1  # probe tick: one draft, cheap re-test
+        return k
+
+    def observe(self, rid: int, accepted: int, fielded: int) -> None:
+        """Fold one verify tick's outcome in: ``accepted`` of ``fielded``
+        drafts matched. No-op for plain-decode ticks (fielded == 0)."""
+        if fielded <= 0:
+            return
+        rate = accepted / fielded
+        ema = self._ema.get(rid, 1.0)
+        ema = (1 - self.alpha) * ema + self.alpha * rate
+        self._ema[rid] = ema
+        k = self._k.get(rid, self.k_max)
+        if ema < self.lo:
+            self._k[rid] = k // 2  # halve; 1 -> 0 disables until probe
+            self._ema[rid] = (self.lo + self.hi) / 2  # re-center after the cut
+        elif ema > self.hi and 0 < k < self.k_max:
+            self._k[rid] = min(2 * k, self.k_max)
+        elif ema > self.hi and k == 0:
+            # a successful probe re-opens the smallest window
+            self._k[rid] = 1

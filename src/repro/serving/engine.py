@@ -39,6 +39,7 @@ from repro.models.model import (
     prefill_chunk,
 )
 from repro.models.params import init_params
+from repro.serving.faults import FaultProfile
 from repro.serving.kv_cache import cache_defs
 from repro.serving.slots import SlotPool, grow_cache
 
@@ -67,6 +68,10 @@ class ServeConfig:
     # speculative serving needs spec_slack >= K to keep the window's tail
     # writes off live positions (the rows only ever hold rejected drafts)
     spec_slack: int = 0
+    # seeded fault-injection scenario (serving/faults.py): the scheduler
+    # reads it from here unless given one explicitly, so an (engine, config)
+    # pair pins a reproducible chaos run; None = no injected faults
+    faults: FaultProfile | None = None
 
 
 class InferenceEngine:
@@ -105,6 +110,9 @@ class InferenceEngine:
             lambda p, fe: encoder_cross_cache(p, cfg, fe)
         )
         self._chunk_probe_fn = None  # non-donating twin of _chunk (calibration)
+        # fault injection: overwrite one slot's cache rows with NaN (the
+        # slot index is traced, so all slots share one compile)
+        self._poison = jax.jit(self._poison_impl, donate_argnums=(0,))
         # physical cache rows per slot: the admission bound plus the
         # speculative verify slack (see ServeConfig.spec_slack)
         self.capacity = self.sc.max_len + self.sc.spec_slack
@@ -162,21 +170,31 @@ class InferenceEngine:
         pool.admit(slot, cache, rid=rid, pos=s0, budget=budget, first_tok=first)
         return first
 
-    def masked_decode_step(self, pool: SlotPool) -> np.ndarray:
-        """One decode step over the whole pool. Returns next greedy token per
-        slot, (max_batch,) int32 — entries for inactive slots are garbage.
+    def masked_decode_step(self, pool: SlotPool) -> tuple[np.ndarray, np.ndarray]:
+        """One decode step over the whole pool. Returns
 
-        Slots whose chunked prefill is still in flight (``admitting``) are
-        masked out along with free slots: their cache rows are dead until
-        ``activate`` lands the prefilled state. Host-side slot bookkeeping
-        (pos/emitted advancement, retirement) is the scheduler's job; this
-        only advances the device state.
+          next:   (max_batch,) int32 — next greedy token per slot; entries
+                  for inactive slots are garbage
+          finite: (max_batch,) bool — the per-tick FINITENESS GUARD: False
+                  where the slot's logits contain NaN/Inf (poisoned cache, a
+                  kernel overflow). The token for such a slot is garbage and
+                  must NOT be committed — the scheduler quarantines the slot
+                  and re-prefills the request from its committed tokens.
+
+        The guard rides inside the decode jit (one ``isfinite`` reduction
+        over the vocab row per slot — noise next to the matmuls), so robust
+        serving costs no extra device round-trip. Slots whose chunked
+        prefill is still in flight (``admitting``) are masked out along with
+        free slots: their cache rows are dead until ``activate`` lands the
+        prefilled state. Host-side slot bookkeeping (pos/emitted
+        advancement, retirement) is the scheduler's job; this only advances
+        the device state.
         """
-        nxt, pool.cache = self._masked_decode(
+        (nxt, fin), pool.cache = self._masked_decode(
             self.params, pool.cache, jnp.asarray(pool.tok),
             jnp.asarray(pool.positions()), jnp.asarray(pool.decode_mask()),
         )
-        return np.asarray(nxt)
+        return np.asarray(nxt), np.asarray(fin)
 
     def _masked_decode_impl(self, params, cache, tok, pos, active):
         """vmapped per-slot decode: every slot steps at its OWN position.
@@ -193,14 +211,64 @@ class InferenceEngine:
         def one(cache_b, tok_b, pos_b):
             c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1), cache_b)
             logits, c1 = decode_step(params, c1, tok_b[None, None], pos_b, cfg)
-            nxt = jnp.argmax(logits[0, : cfg.vocab_size]).astype(jnp.int32)
-            return nxt, jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
+            v = logits[0, : cfg.vocab_size]
+            nxt = jnp.argmax(v).astype(jnp.int32)
+            fin = jnp.isfinite(v).all()
+            return (nxt, fin), jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
 
-        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(cache, tok, pos)
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=((0, 0), 1))(
+            cache, tok, pos)
+
+    # -- fault injection ------------------------------------------------------
+    def poison_slot(self, pool: SlotPool, slot: int) -> None:
+        """Overwrite ``slot``'s cache rows with NaN (injected fault: HBM
+        corruption / kernel overflow). The next masked decode or verify tick
+        produces non-finite logits for the slot, which the in-jit finiteness
+        guard reports — the recovery path (quarantine + re-prefill) is the
+        scheduler's job."""
+        assert pool.cache is not None, "cannot poison a virtual pool"
+        pool.cache = self._poison(pool.cache, jnp.int32(slot))
+
+    @staticmethod
+    def _poison_impl(cache, slot):
+        def one(leaf):
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                return leaf
+            row = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, jnp.full_like(row, jnp.nan), slot, axis=1)
+
+        return jax.tree.map(one, cache)
+
+    def resume_into_slot(self, pool: SlotPool, slot: int, context: np.ndarray, *,
+                         rid: int, budget: int, emitted: int,
+                         next_tok: int) -> None:
+        """Re-admit a quarantined request: re-prefill its COMMITTED context
+        (prompt + all-but-the-last emitted token) into a fresh cache and land
+        it in ``slot``, wholesale overwriting the poisoned rows.
+
+        ``next_tok`` is the request's last committed token — the slot's next
+        decode input, exactly as it was before the fault — so the greedy
+        continuation is token-for-token what the fault-free run emits (the
+        re-prefilled cache differs from the incrementally-built one only by
+        float reassociation, the same caveat as chunked prefill). Retraces
+        the prefill jit per distinct context length, like any admission.
+        """
+        context = np.asarray(context, np.int32)
+        (s,) = context.shape
+        if s + (budget - emitted) + 1 > self.sc.max_len:
+            raise ValueError(f"resume context {s} + remaining budget "
+                             f"{budget - emitted} exceeds max_len {self.sc.max_len}")
+        _, cache = self._prefill(self.params, jnp.asarray(context)[None],
+                                 self._frontend_stub(1))
+        cache = grow_cache(self.cfg, cache, self.capacity)
+        pool.admit(slot, cache, rid=rid, pos=s, budget=budget,
+                   first_tok=next_tok, emitted=emitted)
 
     # -- speculative multi-token decode --------------------------------------
-    def masked_speculative_step(self, pool: SlotPool,
-                                drafts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def masked_speculative_step(
+        self, pool: SlotPool, drafts: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """One speculative verify tick over the whole pool.
 
         ``drafts``: (max_batch, K) int32 candidate tokens per slot (garbage
@@ -215,6 +283,10 @@ class InferenceEngine:
                     tick's emission for a slot is tokens[:a+1] (a accepted
                     drafts + the bonus token), and tokens[a] is the slot's
                     next decode input
+          finite:   (max_batch,) bool — per-tick finiteness guard over the
+                    slot's whole verify window (see ``masked_decode_step``):
+                    False means nothing from this tick may be committed for
+                    the slot — quarantine and re-prefill it
 
         Host-side slot bookkeeping (``SlotPool.advance``, retirement, budget
         truncation) stays the scheduler's job, exactly like masked decode.
@@ -225,11 +297,11 @@ class InferenceEngine:
         assert pool.slack >= k, (
             f"speculative verify of {k} drafts needs spec_slack >= {k} "
             f"spare cache rows (have {pool.slack}) — see ServeConfig.spec_slack")
-        (toks, acc), pool.cache = self._masked_verify(
+        (toks, acc, fin), pool.cache = self._masked_verify(
             self.params, pool.cache, jnp.asarray(pool.tok), jnp.asarray(drafts),
             jnp.asarray(pool.positions()), jnp.asarray(pool.decode_mask()),
         )
-        return np.asarray(toks), np.asarray(acc)
+        return np.asarray(toks), np.asarray(acc), np.asarray(fin)
 
     def _masked_verify_impl(self, params, cache, tok, drafts, pos, active):
         """vmapped per-slot verify: every slot scores its own K+1 window.
@@ -245,14 +317,16 @@ class InferenceEngine:
         def one(cache_b, toks_b, pos_b):
             c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1), cache_b)
             logits, c1 = decode_verify(params, c1, toks_b[None, :], pos_b, cfg)
-            g = jnp.argmax(logits[0, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+            v = logits[0, :, : cfg.vocab_size]
+            g = jnp.argmax(v, axis=-1).astype(jnp.int32)
+            fin = jnp.isfinite(v).all()
             # accept the longest prefix of drafts matching the greedy chain
             ok = jnp.cumprod((toks_b[1:] == g[:-1]).astype(jnp.int32))
             a = jnp.sum(ok).astype(jnp.int32)
             c1 = commit_verify(c1, a, cfg)
-            return (g, a), jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
+            return (g, a, fin), jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
 
-        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=((0, 0), 1))(
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=((0, 0, 0), 1))(
             cache, tokens, pos)
 
     # -- chunked prefill ------------------------------------------------------

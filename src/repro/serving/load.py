@@ -1,14 +1,18 @@
 """Arrival-process generators: timestamped request streams for the serving
 scheduler.
 
-Three processes, all vectorized:
+Four processes, all vectorized:
 
-  poisson_stream   homogeneous Poisson arrivals (i.i.d. exponential gaps)
-  bursty_stream    Markov-modulated Poisson: bursts of fast arrivals, then
-                   long quiets (geometric run lengths, the same construction
-                   as ``core.workload.bursty_trace``)
-  diurnal_stream   rate-varying Poisson (sinusoidal "day/night" intensity)
-                   via Lewis–Shedler thinning
+  poisson_stream      homogeneous Poisson arrivals (i.i.d. exponential gaps)
+  bursty_stream       Markov-modulated Poisson: bursts of fast arrivals, then
+                      long quiets (geometric run lengths, the same
+                      construction as ``core.workload.bursty_trace``)
+  diurnal_stream      rate-varying Poisson (sinusoidal "day/night" intensity)
+                      via Lewis–Shedler thinning
+  flash_crowd_stream  step-function overload: baseline Poisson traffic with
+                      one bounded window at a many-× spike rate (a launch, a
+                      retweet, a retry storm) — the admission-control /
+                      load-shedding stress regime
 
 Per-request prompt lengths are drawn from a small bucket set — the engine's
 jitted prefill retraces per distinct prompt length, so a bounded set keeps
@@ -101,6 +105,7 @@ def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
                               new_tokens: tuple[int, int] = (8, 32),
                               burst_factor: float = 3.0,
                               quiet_factor: float = 0.02,
+                              deadline_s: float | None = None,
                               prompt_period: int | None = None) -> list[Request]:
     """Bursty stream with rates scaled from a calibration's measured costs:
     sustained bursts (mean ~20 requests) at ``burst_factor``× the mean
@@ -114,7 +119,43 @@ def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
                          slow_rate_hz=quiet_factor / service,
                          p_leave_burst=0.05, seed=seed,
                          vocab_size=vocab_size, prompt_lens=prompt_lens,
-                         new_tokens=new_tokens, prompt_period=prompt_period)
+                         new_tokens=new_tokens, deadline_s=deadline_s,
+                         prompt_period=prompt_period)
+
+
+def flash_crowd_stream(n: int, *, base_rate_hz: float, spike_rate_hz: float,
+                       spike_start_s: float, spike_len_s: float, seed: int = 0,
+                       vocab_size: int = 256,
+                       prompt_lens: tuple[int, ...] = (4, 8, 16),
+                       new_tokens: tuple[int, int] = (4, 16),
+                       deadline_s: float | None = None,
+                       prompt_period: int | None = None) -> list[Request]:
+    """Flash-crowd overload: Poisson at ``base_rate_hz`` with a single
+    rectangular spike window [spike_start_s, spike_start_s + spike_len_s)
+    at ``spike_rate_hz``, via Lewis–Shedler thinning against the spike rate.
+
+    During the spike, arrivals outrun the service rate by construction (pick
+    spike_rate ≫ capacity): the pool saturates, the ready queue grows, and
+    deadline-aware shedding — not throughput — decides how much energy turns
+    into ON-TIME completions. The shape is a step function rather than a
+    sinusoid because overload onset is what admission control has to
+    survive; a diurnal ramp gives the scheduler time to drain."""
+    assert spike_rate_hz >= base_rate_hz > 0 and spike_len_s > 0
+    rng = np.random.default_rng(seed)
+    arrivals: list[float] = []
+    t = 0.0
+    while len(arrivals) < n:
+        cand = t + np.cumsum(rng.exponential(1.0 / spike_rate_hz, 4 * n))
+        in_spike = ((cand >= spike_start_s)
+                    & (cand < spike_start_s + spike_len_s))
+        lam = np.where(in_spike, spike_rate_hz, base_rate_hz)
+        keep = cand[rng.uniform(size=cand.size) < lam / spike_rate_hz]
+        arrivals.extend(keep.tolist())
+        t = cand[-1]
+    return _materialize(np.asarray(arrivals[:n]), seed=seed,
+                        vocab_size=vocab_size, prompt_lens=prompt_lens,
+                        new_tokens=new_tokens, deadline_s=deadline_s,
+                        prompt_period=prompt_period)
 
 
 def mean_service_s(cal, *, prompt_len: int = 8, mean_tokens: int = 12) -> float:

@@ -40,12 +40,50 @@ latency) rolls up into a ``ServeReport`` whose ``to_sim_result()`` matches
 ``core.workload.SimResult``, so the offline strategy scorer and the online
 scheduler are directly comparable in items/J.
 
+Robustness layer (overload + faults are routine at deployment scale):
+
+  FAULT MODEL  a seeded ``serving/faults.FaultProfile`` injects three fault
+             classes in deterministic tick order: NaN cache poisoning
+             (caught the same tick by the engine's in-jit finiteness guard),
+             stall ticks (duration ×stall_factor, fed to the shared
+             ``core.retry.StragglerDetector``), and lost chunked-prefill
+             steps. Reruns of the same stream + profile replay the identical
+             fault sequence.
+  RETRY        a poisoned slot is QUARANTINED: the slot retires, nothing
+             from the faulted tick is committed, and the request re-enters
+             through a bounded-backoff retry queue
+             (``core.retry.RestartPolicy``, delays in virtual time). The
+             re-admission re-prefills the request's COMMITTED context
+             (prompt + all-but-last emitted token) with its last committed
+             token as the next decode input, so the greedy continuation is
+             token-for-token what a fault-free run emits. Past the retry
+             budget the request is FAILED and its whole energy counted
+             wasted. Chunk faults retry in place; past the budget the group
+             degrades to blocking admission and chunking stays off for the
+             rest of the run.
+  SHEDDING     with ``shed=True``, admission is deadline-aware: a request is
+             served only if the fixed cost model (prefill + one step per
+             remaining token) says it can finish inside its deadline —
+             infeasible requests are shed at admission (and the ready queue
+             is re-scanned every tick, so requests that became hopeless
+             while waiting are dropped before they burn prefill energy).
+             ``queue_limit`` adds queue-depth backpressure at ingress.
+             Serving everything under a flash crowd melts items/J — every
+             late request still pays full energy; shedding converts that
+             wasted work into on-time completions (see the overload BENCH
+             scenario).
+  DEGRADATION  ``spec_throttle=True`` lets speculation degrade gracefully:
+             a per-request acceptance-EMA throttle halves a stalling
+             request's draft window (regrowing on recovery), and a pool
+             whose windows all hit 0 falls back to plain decode ticks.
+
 ``run_static_batches`` is the baseline this subsystem replaces: fixed-batch
 lockstep serving (wait to fill a batch or flush on timeout, pad every
 request to the cohort's longest prompt and largest token budget).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
@@ -55,9 +93,11 @@ import jax
 import numpy as np
 
 from repro.core.energy import DEFAULT_CHIP, TPUChip
+from repro.core.retry import RestartPolicy, StragglerDetector
 from repro.core.workload import AccelProfile, SimResult
-from repro.serving.draft import NgramDrafter
+from repro.serving.draft import NgramDrafter, SpecThrottle
 from repro.serving.engine import ChunkedPrefillState, InferenceEngine, tpu_reload_costs
+from repro.serving.faults import FaultInjector, FaultProfile
 from repro.serving.load import Request
 from repro.serving.policy import DutyCyclePolicy, make_policy
 from repro.serving.slots import SlotPool
@@ -174,6 +214,10 @@ class RequestRecord:
     tokens: list[int] = dataclasses.field(default_factory=list)
     energy_j: float = 0.0
     missed: bool = False
+    shed: bool = False    # dropped by admission control (never completed)
+    failed: bool = False  # quarantined past the retry budget
+    retries: int = 0      # quarantine-and-retry re-admissions performed
+    waste_j: float = 0.0  # fault-discarded tick shares (subset of energy_j)
 
     @property
     def latency_s(self) -> float:
@@ -191,10 +235,26 @@ class ServeReport:
     chunks: int = 0  # prefill chunks processed (chunked admission only)
     verify_ticks: int = 0      # speculative verify passes (speculative only)
     accepted_tokens: int = 0   # tokens committed by those passes
+    shed: int = 0              # dropped by admission control / backpressure
+    retried: int = 0           # quarantine-and-retry re-admissions
+    quarantined: int = 0       # quarantine events (poisoned slots caught)
+    failed: int = 0            # requests abandoned past the retry budget
+    chunk_faults: int = 0      # lost chunked-prefill ticks
+    stragglers: int = 0        # StragglerDetector mitigation signals
+    degraded: int = 0          # chunked→blocking admission fallbacks
+    throttled_ticks: int = 0   # speculative ticks demoted to plain decode
+    wasted_energy_j: float = 0.0  # energy that produced no on-time tokens
 
     @property
     def items(self) -> int:
-        return len(self.records)
+        """Completed requests — shed and failed requests don't count."""
+        return sum(1 for r in self.records if not r.shed and not r.failed)
+
+    @property
+    def useful_items(self) -> int:
+        """Completed ON TIME: the numerator overload scenarios care about."""
+        return sum(1 for r in self.records
+                   if not r.shed and not r.failed and not r.missed)
 
     @property
     def accepted_per_tick(self) -> float:
@@ -206,10 +266,18 @@ class ServeReport:
     def items_per_joule(self) -> float:
         return self.items / self.energy_j if self.energy_j else 0.0
 
+    @property
+    def goodput_per_joule(self) -> float:
+        """On-time completions per joule — the shed-vs-serve-everything
+        comparison metric (a late completion burned its energy for
+        nothing)."""
+        return self.useful_items / self.energy_j if self.energy_j else 0.0
+
     def latency_pct(self, q: float) -> float:
-        if not self.records:
+        lats = [r.latency_s for r in self.records if not r.shed and not r.failed]
+        if not lats:
             return math.nan
-        return float(np.percentile([r.latency_s for r in self.records], q))
+        return float(np.percentile(lats, q))
 
     @property
     def p50_s(self) -> float:
@@ -227,6 +295,14 @@ class ServeReport:
         if self.verify_ticks:
             extra += (f" verify={self.verify_ticks} "
                       f"acc/tick={self.accepted_per_tick:.2f}")
+        if self.shed or self.quarantined or self.failed:
+            extra += (f" shed={self.shed} quar={self.quarantined} "
+                      f"retry={self.retried} failed={self.failed} "
+                      f"goodput/J={self.goodput_per_joule:.5f} "
+                      f"wasted={self.wasted_energy_j:.3f}J")
+        if self.stragglers or self.degraded or self.throttled_ticks:
+            extra += (f" straggle={self.stragglers} degraded={self.degraded} "
+                      f"throttled={self.throttled_ticks}")
         return (f"{self.mode:11s} items={self.items} items/J={self.items_per_joule:.5f} "
                 f"p50={self.p50_s * 1e3:.1f}ms p99={self.p99_s * 1e3:.1f}ms "
                 f"reloads={self.reloads} missed={self.missed}{extra}")
@@ -277,6 +353,30 @@ class ContinuousBatchingScheduler:
     admission (slots whose prefill is in flight stay out of the verify
     mask). Verify energy is charged per tick at measured occupancy and
     amortized over the slots by tokens committed.
+
+    Robustness (see the module docstring for the full model):
+
+      ``faults``       a seeded ``FaultProfile`` (defaults to the engine's
+                       ``ServeConfig.faults``) injects NaN poisoning, stall
+                       ticks and chunk faults in deterministic tick order.
+                       Poisoned slots are caught by the engine's in-jit
+                       finiteness guard, quarantined, and re-admitted from
+                       their committed tokens under ``retry`` (bounded
+                       exponential backoff in virtual time; default budget
+                       4 retries with ~2-step base delay). Requests past
+                       the budget are failed and their energy counted
+                       wasted.
+      ``shed``         deadline-aware admission control: requests the fixed
+                       cost model says cannot finish inside their deadline
+                       are dropped at admission, and the ready queue is
+                       re-scanned every tick. ``queue_limit`` bounds the
+                       ready queue (ingress backpressure, applies with or
+                       without ``shed``).
+      ``spec_throttle`` per-request speculation auto-throttle
+                       (``draft.SpecThrottle``): acceptance-stalling
+                       requests shrink their draft window to 0 and the tick
+                       falls back to plain decode; windows regrow on
+                       recovery.
     """
 
     def __init__(self, engine: InferenceEngine, *,
@@ -285,7 +385,12 @@ class ContinuousBatchingScheduler:
                  execute: bool = True, calibration=None,
                  prefill_util: float = 1.0, prefill_chunk: int | None = None,
                  speculate_k: int | None = None, drafter=None,
-                 policy_kw: dict | None = None):
+                 policy_kw: dict | None = None,
+                 shed: bool = False, queue_limit: int | None = None,
+                 faults: FaultProfile | None = None,
+                 retry: RestartPolicy | None = None,
+                 spec_throttle: bool = False,
+                 detector: StragglerDetector | None = None):
         if not execute and calibration is None:
             raise ValueError("execute=False needs an explicit calibration")
         if prefill_chunk is not None and prefill_chunk < 1:
@@ -297,6 +402,10 @@ class ContinuousBatchingScheduler:
                 f"speculate_k={speculate_k} needs an engine with "
                 f"ServeConfig.spec_slack >= {speculate_k} spare cache rows "
                 f"(have {engine.sc.spec_slack})")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        if spec_throttle and not speculate_k:
+            raise ValueError("spec_throttle requires speculate_k")
         self.engine = engine
         self.chip = chip
         self.chips = chips
@@ -315,6 +424,20 @@ class ContinuousBatchingScheduler:
         self.profile = _tpu_profile(self.cal.step_s(), chip, chips, engine.cfg)
         self.policy = (policy if isinstance(policy, DutyCyclePolicy)
                        else make_policy(policy, self.profile, **(policy_kw or {})))
+        self.shed = shed
+        self.queue_limit = queue_limit
+        self.faults = faults if faults is not None else sc.faults
+        # backoff lives in VIRTUAL time, so the default scales with the
+        # measured step: first retry waits ~2 ticks, growing 2x per attempt
+        step = self.cal.step_s()
+        self.retry = retry if retry is not None else RestartPolicy(
+            max_restarts=4, backoff_s=2 * step, backoff_factor=2.0,
+            max_backoff_s=64 * step)
+        self.throttle = (SpecThrottle(speculate_k)
+                         if spec_throttle and speculate_k else None)
+        self.detector = detector if detector is not None else (
+            StragglerDetector()
+            if self.faults is not None and self.faults.enabled else None)
         self.admitted = 0
         self.completed = 0
         self.chunks = 0
@@ -332,6 +455,23 @@ class ContinuousBatchingScheduler:
             self.completed += 1
             if self.drafter is not None:
                 self.drafter.forget(rec.rid)
+            if self.throttle is not None:
+                self.throttle.forget(rec.rid)
+
+    def _infeasible(self, t: float, context_len: int, remaining: int,
+                    arrival_s: float, deadline_s: float | None) -> bool:
+        """Deadline feasibility against the fixed cost model: a prefill now
+        plus one decode step per still-owed token must land inside the
+        deadline. ``remaining`` counts the steps owed AFTER the prefill's
+        own emission — ``new_tokens - 1`` for a fresh admission,
+        ``budget - emitted`` for a retry (whose re-prefill emits nothing
+        new). Speculation can only finish EARLIER than this estimate, so a
+        feasible verdict never turns a servable request away."""
+        if not self.shed or deadline_s is None:
+            return False
+        est = (t + self.cal.prefill_s(1, context_len)
+               + remaining * self.cal.step_s())
+        return est > arrival_s + deadline_s
 
     def run(self, requests: Sequence[Request]) -> ServeReport:
         mode = ("speculative" if self.speculate_k
@@ -349,33 +489,163 @@ class ContinuousBatchingScheduler:
         recs = {r.rid: RequestRecord(r.rid, r.arrival_s, len(r.prompt), r.new_tokens)
                 for r in reqs}
         deadlines = {r.rid: r.deadline_s for r in reqs}
+        by_rid = {r.rid: r for r in reqs}
         self.admitted = self.completed = self.chunks = 0
         self.verify_ticks = self.accepted_tokens = 0
         self.policy.busy_s.clear()  # per-run ledger (τ estimator state persists)
+        inj = (FaultInjector(self.faults)
+               if self.faults is not None and self.faults.enabled else None)
         n = len(reqs)
         pool, chip, chips = self.pool, self.chip, self.chips
         t = reqs[0].arrival_s
         gap_energy = 0.0
         reloads = 0
-        i = 0
+        i = 0                      # next not-yet-ingested arrival
+        ready: collections.deque[Request] = collections.deque()
+        retry_q: list[dict] = []   # quarantined requests awaiting re-admission
+        attempts: dict[int, int] = {}
         group: ChunkedPrefillState | None = None
+        group_fails = 0        # consecutive lost chunk ticks of this group
+        group_spent_ok = 0.0   # healthy-tick energy sunk into this group
+        chunk_disabled = False
+        shed = retried = quarantined = failed = 0
+        chunk_faults = stragglers = degraded = throttled = 0
         guard = 0
         cn = self.prefill_chunk or 1
         guard_max = 16 * (n + sum(r.new_tokens for r in reqs)
                           + sum(-(-len(r.prompt) // cn) for r in reqs)) + 64
+        if inj is not None:
+            # every retry re-prefills and re-runs up to a request's whole
+            # decode; scale the progress guard by the retry budget
+            guard_max *= 2 + self.retry.max_restarts
 
-        while self.completed < n:
+        def ingest() -> None:
+            """Move everything that has arrived by ``t`` into the ready
+            queue, shedding past the ``queue_limit`` backpressure bound."""
+            nonlocal i, shed
+            while i < n and reqs[i].arrival_s <= t:
+                r = reqs[i]
+                i += 1
+                if (self.queue_limit is not None
+                        and len(ready) >= self.queue_limit):
+                    recs[r.rid].shed = True
+                    shed += 1
+                else:
+                    ready.append(r)
+
+        def shed_scan() -> None:
+            """Deadline re-check over the whole ready queue: drop requests
+            that became infeasible while waiting, before any prefill energy
+            is spent on them."""
+            nonlocal shed
+            if not self.shed:
+                return
+            kept = []
+            for r in ready:
+                if self._infeasible(t, len(r.prompt), r.new_tokens - 1,
+                                    r.arrival_s, deadlines[r.rid]):
+                    recs[r.rid].shed = True
+                    shed += 1
+                else:
+                    kept.append(r)
+            if len(kept) != len(ready):
+                ready.clear()
+                ready.extend(kept)
+
+        def quarantine(slot: int) -> None:
+            """Retire a poisoned slot; nothing from the faulted tick was
+            committed. The request re-enters through the retry queue after
+            a backoff delay, or is failed past the retry budget."""
+            nonlocal quarantined, failed
+            info = pool.slots[slot]
+            rid, budget, emitted = info.rid, info.budget, info.emitted
+            pool.retire(slot)
+            if self.drafter is not None:
+                self.drafter.forget(rid)
+            if self.throttle is not None:
+                self.throttle.forget(rid)
+            quarantined += 1
+            a = attempts.get(rid, 0)
+            if a >= self.retry.max_restarts:
+                recs[rid].failed = True
+                failed += 1
+                return
+            attempts[rid] = a + 1
+            retry_q.append({"rid": rid, "ready_at": t + self.retry.delay(a),
+                            "budget": budget, "emitted": emitted})
+
+        def admit_retry(e: dict) -> None:
+            """Re-admit a quarantined request: blocking re-prefill of its
+            COMMITTED context, with the last committed token as the next
+            decode input — the greedy continuation is token-for-token what
+            a fault-free run emits."""
+            nonlocal t, shed, retried
+            rid = e["rid"]
+            r, rec = by_rid[rid], recs[rid]
+            emitted, budget = e["emitted"], e["budget"]
+            context = np.asarray(list(r.prompt) + rec.tokens[:emitted - 1],
+                                 np.int32)
+            if self._infeasible(t, len(context), budget - emitted,
+                                r.arrival_s, deadlines[rid]):
+                rec.shed = True  # shed at retry: the sunk energy is wasted
+                shed += 1
+                return
+            slot = pool.next_free()
+            tp = self.cal.prefill_s(1, len(context))
+            next_tok = rec.tokens[emitted - 1]
+            if self.execute:
+                self.engine.resume_into_slot(pool, slot, context, rid=rid,
+                                             budget=budget, emitted=emitted,
+                                             next_tok=next_tok)
+            else:
+                pool.admit_virtual(slot, rid=rid, pos=len(context),
+                                   budget=budget, emitted=emitted)
+                pool.tok[slot] = next_tok
+            t += tp
+            self.policy.on_busy("prefill", tp)
+            rec.energy_j += chip.step_power(self.prefill_util) * chips * tp
+            rec.retries += 1
+            retried += 1
+            if self.drafter is not None:
+                self.drafter.begin(rid, list(r.prompt) + rec.tokens[:emitted])
+            if self.throttle is not None:
+                self.throttle.begin(rid)
+
+        def observe_tick(dur: float) -> None:
+            nonlocal stragglers
+            if self.detector is not None and self.detector.observe(dur):
+                stragglers += 1
+                self.detector.reset()
+
+        while self.completed + shed + failed < n:
             guard += 1
             assert guard <= guard_max, "scheduler failed to make progress"
             progressed = False
+            ingest()
+            shed_scan()
 
-            if self.prefill_chunk is None:
-                # BLOCKING admissions: fill free slots from everything that
-                # has arrived; each prefill stalls the whole pool
-                while i < n and reqs[i].arrival_s <= t and pool.free_count:
-                    r = reqs[i]
-                    slot = pool.next_free()
+            # quarantined requests re-admit FIRST — they hold committed work
+            while pool.free_count and retry_q:
+                idx = next((j for j, e in enumerate(retry_q)
+                            if e["ready_at"] <= t), None)
+                if idx is None:
+                    break
+                admit_retry(retry_q.pop(idx))
+                ingest()
+
+            if self.prefill_chunk is None or chunk_disabled:
+                # BLOCKING admissions: fill free slots from the ready queue;
+                # each prefill stalls the whole pool
+                while ready and pool.free_count:
+                    r = ready.popleft()
                     rec = recs[r.rid]
+                    # t advanced during earlier admissions — re-check
+                    if self._infeasible(t, len(r.prompt), r.new_tokens - 1,
+                                        r.arrival_s, deadlines[r.rid]):
+                        rec.shed = True
+                        shed += 1
+                        continue
+                    slot = pool.next_free()
                     tp = self.cal.prefill_s(1, len(r.prompt))
                     if self.execute:
                         first = self.engine.prefill_into_slot(
@@ -391,19 +661,18 @@ class ContinuousBatchingScheduler:
                     rec.tokens.append(first)
                     if self.drafter is not None:
                         self.drafter.begin(r.rid, list(r.prompt) + [first])
+                    if self.throttle is not None:
+                        self.throttle.begin(r.rid)
                     self.admitted += 1
-                    i += 1
                     self._maybe_finish(slot, rec, t, deadlines[r.rid])
-            elif group is None and i < n and reqs[i].arrival_s <= t and pool.free_count:
+                    ingest()
+            elif group is None and ready and pool.free_count:
                 # CHUNKED admission: reserve slots for the maximal FIFO run of
                 # waiting same-prompt-length requests (one batched prefill)
-                g = [reqs[i]]
-                i += 1
-                while (i < n and len(g) < pool.free_count
-                       and reqs[i].arrival_s <= t
-                       and len(reqs[i].prompt) == len(g[0].prompt)):
-                    g.append(reqs[i])
-                    i += 1
+                g = [ready.popleft()]
+                while (ready and len(g) < pool.free_count
+                       and len(ready[0].prompt) == len(g[0].prompt)):
+                    g.append(ready.popleft())
                 slots = []
                 for r in g:
                     slot = pool.next_free()
@@ -414,6 +683,8 @@ class ContinuousBatchingScheduler:
                 prompts = np.stack([r.prompt for r in g]).astype(np.int32)
                 rids = [r.rid for r in g]
                 budgets = [r.new_tokens for r in g]
+                group_fails = 0
+                group_spent_ok = 0.0
                 if self.execute:
                     group = self.engine.begin_chunked_prefill(
                         pool, slots, prompts, rids=rids, budgets=budgets)
@@ -426,116 +697,222 @@ class ContinuousBatchingScheduler:
                 # chunk's energy is split over the group's requests
                 k = len(group.rids)
                 ttok = min(self.prefill_chunk, group.s0 - group.pos)
-                tp = self.cal.chunk_s(k, ttok)
-                if self.execute:
-                    self.engine.chunked_prefill_step(group, self.prefill_chunk)
-                else:
-                    group.pos += ttok
+                fail = inj.chunk_fails() if inj is not None else False
+                stall = inj.stall() if inj is not None else 1.0
+                tp = self.cal.chunk_s(k, ttok) * stall
                 t += tp
                 self.chunks += 1
                 self.policy.on_busy("prefill", tp)
+                observe_tick(tp)
                 share = chip.step_power(self.prefill_util) * chips * tp / k
                 for rid in group.rids:
                     recs[rid].energy_j += share
                 progressed = True
-                if group.done:
+                if fail:
+                    # the tick's work is lost: the group cache did not advance
+                    chunk_faults += 1
+                    group_fails += 1
+                    for rid in group.rids:
+                        recs[rid].waste_j += share
+                    if group_fails > self.retry.max_restarts:
+                        # past the retry budget: DEGRADE — drop the group's
+                        # reservations, requeue its members for blocking
+                        # admission, and keep chunking off for this run
+                        degraded += 1
+                        chunk_disabled = True
+                        for rid in group.rids:
+                            recs[rid].waste_j += group_spent_ok / k
+                        for slot in group.slots:
+                            pool.retire(slot)
+                        self.admitted -= k  # they re-admit through blocking
+                        for r in reversed([by_rid[rid] for rid in group.rids]):
+                            ready.appendleft(r)
+                        group = None
+                else:
+                    group_fails = 0
+                    group_spent_ok += share * k
                     if self.execute:
-                        first = self.engine.finish_chunked_prefill(pool, group)
+                        self.engine.chunked_prefill_step(group, self.prefill_chunk)
                     else:
-                        first = np.zeros(k, np.int32)
-                        for j, slot in enumerate(group.slots):
-                            pool.activate(slot, None, rid=group.rids[j],
-                                          pos=group.s0, budget=group.budgets[j],
-                                          first_tok=0)
-                    for j, rid in enumerate(group.rids):
-                        rec = recs[rid]
-                        rec.tokens.append(int(first[j]))
-                        if self.drafter is not None:
-                            self.drafter.begin(
-                                rid, list(group.prompts[j]) + [int(first[j])])
-                        self._maybe_finish(group.slots[j], rec, t, deadlines[rid])
-                    group = None
+                        group.pos += ttok
+                    if group.done:
+                        if self.execute:
+                            first = self.engine.finish_chunked_prefill(pool, group)
+                        else:
+                            first = np.zeros(k, np.int32)
+                            for j, slot in enumerate(group.slots):
+                                pool.activate(slot, None, rid=group.rids[j],
+                                              pos=group.s0,
+                                              budget=group.budgets[j],
+                                              first_tok=0)
+                        for j, rid in enumerate(group.rids):
+                            rec = recs[rid]
+                            rec.tokens.append(int(first[j]))
+                            if self.drafter is not None:
+                                self.drafter.begin(
+                                    rid, list(group.prompts[j]) + [int(first[j])])
+                            if self.throttle is not None:
+                                self.throttle.begin(rid)
+                            self._maybe_finish(group.slots[j], rec, t,
+                                               deadlines[rid])
+                        group = None
 
-            if pool.decoding_count and self.speculate_k:
+            decoding = pool.decoding_slots()
+            spec_k = 0
+            win: dict[int, int] | None = None
+            if decoding and self.speculate_k:
+                if self.throttle is not None:
+                    # per-slot windows; the pool's verify width is their max
+                    # (windows move in powers of two, so the K-keyed verify
+                    # jit sees at most log2(K) distinct signatures)
+                    win = {s: self.throttle.window(pool.slots[s].rid)
+                           for s in decoding}
+                    spec_k = max(win.values())
+                    if spec_k == 0:
+                        throttled += 1  # whole pool stalled: plain tick
+                else:
+                    spec_k = self.speculate_k
+
+            if spec_k:
                 # SPECULATIVE DECODING: draft K candidates per decoding slot
                 # (admitting slots stay out of the verify mask), score every
                 # slot's K+1 window in ONE verify pass, commit the accepted
                 # prefixes. The tick is charged like a decode step plus the
                 # per-candidate increment, amortized by tokens committed.
-                k = self.speculate_k
-                decoding = pool.decoding_slots()
-                drafts = np.zeros((pool.max_batch, k), np.int32)
+                victims = inj.poison_victims(decoding) if inj is not None else []
+                stall = inj.stall() if inj is not None else 1.0
+                if victims and self.execute:
+                    for s in victims:
+                        self.engine.poison_slot(pool, s)
+                drafts = np.zeros((pool.max_batch, spec_k), np.int32)
                 for slot in decoding:
-                    drafts[slot] = self.drafter.propose(pool.slots[slot].rid)
+                    drafts[slot] = self.drafter.propose(
+                        pool.slots[slot].rid)[:spec_k]
                 if self.execute:
-                    toks, acc = self.engine.masked_speculative_step(pool, drafts)
+                    toks, acc, fin = self.engine.masked_speculative_step(
+                        pool, drafts)
                 else:  # the virtual model's greedy chain is all zeros
-                    toks = np.zeros((pool.max_batch, k + 1), np.int32)
+                    toks = np.zeros((pool.max_batch, spec_k + 1), np.int32)
                     acc = np.cumprod(drafts == 0, axis=1).sum(axis=1)
-                ts = self.cal.verify_s(k)
+                    fin = np.ones(pool.max_batch, bool)
+                    fin[victims] = False
+                ts = self.cal.verify_s(spec_k) * stall
                 t += ts
                 self.verify_ticks += 1
                 self.policy.on_busy("verify", ts)
+                observe_tick(ts)
                 util = len(decoding) / pool.max_batch
                 tick_e = chip.step_power(util) * chips * ts
-                # a slot never overshoots its budget: acceptance past the
-                # remaining budget is truncated and the slot retires mid-verify
-                emit = {s: min(int(acc[s]) + 1,
-                               pool.slots[s].budget - pool.slots[s].emitted)
+                # a slot never overshoots its budget (acceptance past the
+                # remaining budget is truncated, the slot retires mid-verify)
+                # nor its own throttle window; a quarantined slot's discarded
+                # work weighs like one token in the amortization
+                caps = {s: (win[s] if win is not None else spec_k)
+                        for s in decoding}
+                emit = {s: (1 if not fin[s] else
+                            min(int(acc[s]) + 1, caps[s] + 1,
+                                pool.slots[s].budget - pool.slots[s].emitted))
                         for s in decoding}
                 total = sum(emit.values())
                 for slot in decoding:
-                    n_tok = emit[slot]
                     info = pool.slots[slot]
+                    rec = recs[info.rid]
+                    share = tick_e * emit[slot] / total
+                    rec.energy_j += share
+                    if not fin[slot]:
+                        rec.waste_j += share
+                        quarantine(slot)
+                        continue
+                    n_tok = emit[slot]
                     out = toks[slot, :n_tok].tolist()
                     pool.advance(slot, n_tok, int(toks[slot, n_tok - 1]))
                     self.drafter.observe(info.rid, out)
-                    rec = recs[info.rid]
+                    if self.throttle is not None:
+                        self.throttle.observe(
+                            info.rid, min(int(acc[slot]), caps[slot]), caps[slot])
                     rec.tokens.extend(out)
-                    rec.energy_j += tick_e * n_tok / total
                     self.accepted_tokens += n_tok
                     self._maybe_finish(slot, rec, t, deadlines[info.rid])
                 progressed = True
-            elif pool.decoding_count:
+            elif decoding:
                 # DECODING: one masked step over the pool at measured occupancy
-                ts = self.cal.step_s()
-                util = pool.decoding_count / pool.max_batch
-                nxt = (self.engine.masked_decode_step(pool) if self.execute
-                       else np.zeros(pool.max_batch, np.int32))
+                victims = inj.poison_victims(decoding) if inj is not None else []
+                stall = inj.stall() if inj is not None else 1.0
+                if victims and self.execute:
+                    for s in victims:
+                        self.engine.poison_slot(pool, s)
+                ts = self.cal.step_s() * stall
+                util = len(decoding) / pool.max_batch
+                if self.execute:
+                    nxt, fin = self.engine.masked_decode_step(pool)
+                else:
+                    nxt = np.zeros(pool.max_batch, np.int32)
+                    fin = np.ones(pool.max_batch, bool)
+                    fin[victims] = False
                 t += ts
                 self.policy.on_busy("decode", ts)
-                share = chip.step_power(util) * chips * ts / pool.decoding_count
-                for slot in pool.decoding_slots():
+                observe_tick(ts)
+                share = chip.step_power(util) * chips * ts / len(decoding)
+                for slot in decoding:
                     info = pool.slots[slot]
-                    pool.advance(slot, 1, int(nxt[slot]))
                     rec = recs[info.rid]
-                    rec.tokens.append(int(nxt[slot]))
                     rec.energy_j += share
+                    if not fin[slot]:
+                        rec.waste_j += share
+                        quarantine(slot)
+                        continue
+                    tok = int(nxt[slot])
+                    pool.advance(slot, 1, tok)
+                    rec.tokens.append(tok)
+                    if self.speculate_k and self.drafter is not None:
+                        # throttled-to-0 tick: keep the drafter's history in
+                        # sync so a re-opened window drafts from truth
+                        self.drafter.observe(info.rid, [tok])
                     self._maybe_finish(slot, rec, t, deadlines[info.rid])
                 progressed = True
 
-            if not progressed and group is None and i < n:
-                # IDLE/OFF: pool drained — the online policy owns the gap.
-                # (everything with arrival <= t was admitted above, so the
-                # gap is strictly positive)
-                gap = reqs[i].arrival_s - t
+            if not progressed and group is None and (i < n or retry_q):
+                # IDLE/OFF: pool drained — the online policy owns the gap up
+                # to the next event (an arrival, or a retry backoff expiry).
+                # (everything admissible by t was admitted above, so the gap
+                # is strictly positive)
+                pending = []
+                if i < n:
+                    pending.append(reqs[i].arrival_s)
+                if retry_q:
+                    pending.append(min(e["ready_at"] for e in retry_q))
+                target = min(pending)
+                gap = target - t
                 assert gap > 0
                 out = self.policy.on_gap(gap)
                 gap_energy += out.energy_j
                 reloads += int(out.slept)
-                t = reqs[i].arrival_s + out.wake_s
+                t = target + out.wake_s
 
-            assert self.admitted == self.completed + pool.active_count, \
-                "slot leak: admitted != completed + in-flight"
+            # conservation: every request is in exactly one place
+            assert (self.completed + shed + failed + pool.active_count
+                    + len(retry_q) + len(ready) + (n - i) == n), \
+                "request leak: terminal + in-flight + queued != total"
 
         records = [recs[r.rid] for r in reqs]
         energy = (self.profile.e_cfg_j  # the one true initial configuration
                   + sum(rec.energy_j for rec in records) + gap_energy)
-        makespan = max(rec.finish_s for rec in records) - reqs[0].arrival_s
+        finished = [rec.finish_s for rec in records
+                    if not math.isnan(rec.finish_s)]
+        makespan = (max(finished) if finished else t) - reqs[0].arrival_s
+        # wasted energy: everything spent on a request that never completed
+        # on time (shed mid-retry, failed, or missed its deadline), plus the
+        # fault-discarded tick shares of requests that did complete
+        wasted = sum(rec.energy_j if (rec.shed or rec.failed or rec.missed)
+                     else rec.waste_j for rec in records)
         return ServeReport(mode, records, energy, makespan, reloads,
                            sum(rec.missed for rec in records), chunks=self.chunks,
                            verify_ticks=self.verify_ticks,
-                           accepted_tokens=self.accepted_tokens)
+                           accepted_tokens=self.accepted_tokens,
+                           shed=shed, retried=retried, quarantined=quarantined,
+                           failed=failed, chunk_faults=chunk_faults,
+                           stragglers=stragglers, degraded=degraded,
+                           throttled_ticks=throttled, wasted_energy_j=wasted)
 
 
 # ---------------------------------------------------------------------------

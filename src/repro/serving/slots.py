@@ -169,25 +169,31 @@ class SlotPool:
         self.active[slot] = True
 
     def admit(self, slot: int, req_cache: dict, *, rid: int, pos: int,
-              budget: int, first_tok: int) -> None:
+              budget: int, first_tok: int, emitted: int = 1) -> None:
         """Place a prefilled request (cache already grown to max_len) into a
-        free slot. ``pos`` is the prompt length; ``first_tok`` the argmax of
-        the prefill logits (the request's first emitted token)."""
+        free slot. ``pos`` is the prefilled context length; ``first_tok`` the
+        slot's next decode input (the argmax of the prefill logits for a
+        fresh admission, or the last committed token for a quarantine-retry
+        re-admission, where ``emitted`` carries the tokens already emitted
+        before the fault)."""
         assert self.cache is not None, "cannot admit a real cache into a virtual pool"
-        assert pos + budget <= self.max_len, (pos, budget, self.max_len)
-        assert budget >= 1
+        assert pos + (budget - emitted) + 1 <= self.max_len, (pos, budget, emitted,
+                                                              self.max_len)
+        assert 1 <= emitted <= budget
         self._claim(slot)
         self.cache = self._write(self.cache, req_cache, jnp.int32(slot))
-        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
+        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=emitted)
         self.tok[slot] = first_tok
 
-    def admit_virtual(self, slot: int, *, rid: int, pos: int, budget: int) -> None:
+    def admit_virtual(self, slot: int, *, rid: int, pos: int, budget: int,
+                      emitted: int = 1) -> None:
         """Claim a slot with bookkeeping only (virtual pools / engine-free
         scheduler runs): no device cache is written."""
-        assert pos + budget <= self.max_len, (pos, budget, self.max_len)
-        assert budget >= 1
+        assert pos + (budget - emitted) + 1 <= self.max_len, (pos, budget, emitted,
+                                                              self.max_len)
+        assert 1 <= emitted <= budget
         self._claim(slot)
-        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=1)
+        self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=emitted)
 
     def reserve(self, slot: int, *, rid: int) -> None:
         """Claim a free slot for a request whose chunked prefill is about to

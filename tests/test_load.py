@@ -7,6 +7,7 @@ from repro.serving.load import (
     bursty_stream,
     bursty_stream_for_service,
     diurnal_stream,
+    flash_crowd_stream,
     mean_service_s,
     poisson_stream,
 )
@@ -61,10 +62,45 @@ def test_diurnal_empirical_rate_matches_time_average():
     assert counts.max() > 1.5 * counts.min()
 
 
+def test_flash_crowd_empirical_rates_inside_and_outside_spike():
+    """The spike window runs at the spike rate, the rest at the base rate,
+    and the transition is a step: arrivals cluster in the window."""
+    base, spike, start, length = 5.0, 400.0, 2.0, 1.0
+    reqs = flash_crowd_stream(1200, base_rate_hz=base, spike_rate_hz=spike,
+                              spike_start_s=start, spike_len_s=length,
+                              seed=3, vocab_size=64)
+    arr = _arrivals(reqs)
+    in_spike = arr[(arr >= start) & (arr < start + length)]
+    assert len(in_spike) / length == pytest.approx(spike, rel=0.1)
+    pre = arr[arr < start]
+    if len(pre) > 3:  # a short pre-window: loose bound only
+        assert len(pre) / start < 4 * base
+    # outside the window the long tail reverts to the base rate
+    post = arr[arr >= start + length]
+    assert (post[-1] - post[0]) / len(post) == pytest.approx(1 / base, rel=0.15)
+    # the window's arrival DENSITY dwarfs the baseline — the overload step
+    assert len(in_spike) / length > 20 * base
+
+
+def test_flash_crowd_overloads_then_drains():
+    """During the spike, instantaneous arrival rate exceeds any fixed
+    service rate the base traffic can sustain — the stream the shedding
+    BENCH scenario feeds the scheduler."""
+    reqs = flash_crowd_stream(300, base_rate_hz=2.0, spike_rate_hz=200.0,
+                              spike_start_s=1.0, spike_len_s=1.0, seed=0,
+                              vocab_size=64)
+    gaps = np.diff(_arrivals(reqs))
+    # spike gaps ~5ms, base gaps ~500ms: bimodal by construction
+    assert np.mean(gaps < 0.05) > 0.5
+    assert np.mean(gaps > 0.1) > 0.02
+
+
 @pytest.mark.parametrize("gen,kw", [
     (poisson_stream, dict(rate_hz=40.0)),
     (bursty_stream, dict(fast_rate_hz=200.0, slow_rate_hz=2.0)),
     (diurnal_stream, dict(base_rate_hz=10.0, peak_rate_hz=50.0, period_s=3.0)),
+    (flash_crowd_stream, dict(base_rate_hz=10.0, spike_rate_hz=100.0,
+                              spike_start_s=1.0, spike_len_s=2.0)),
 ])
 def test_generators_deterministic_under_fixed_seed(gen, kw):
     a = gen(200, seed=9, vocab_size=128, prompt_lens=(4, 8), new_tokens=(2, 6), **kw)

@@ -103,7 +103,7 @@ def test_masked_decode_exact_under_staggered_occupancy(arch):
     for step in range(4):
         if step == 2:  # admit request 2 while request 1 is mid-decode
             toks2.append(eng.prefill_into_slot(pool, 1, p2, rid=2, budget=5))
-        nxt = eng.masked_decode_step(pool)
+        nxt, _ = eng.masked_decode_step(pool)
         for s in pool.active_slots():
             info = pool.slots[s]
             info.pos += 1
@@ -245,6 +245,95 @@ def test_scheduler_queue_pressure_and_deadlines():
     assert sim.missed_deadlines == sum(r.missed for r in rep.records)
     # an impossibly tight deadline under queue pressure must register misses
     assert sim.missed_deadlines > 0
+
+
+def test_deadline_exactly_at_completion_is_on_time():
+    """Boundary semantics: a request that finishes EXACTLY on its deadline
+    is on time — ``missed`` uses strict >, and the admission feasibility
+    estimate uses strict > too, so shedding leaves it alone. Power-of-two
+    calibration costs make every sum in the virtual ledger exact, so the
+    equality is bit-for-bit, not approximate."""
+    from repro.serving.load import Request
+
+    eng = _engine("whisper-tiny", max_batch=2, max_len=64)
+    cal = FixedCalibration(step_s=2.0 ** -8, prefill_base_s=2.0 ** -10,
+                           prefill_per_tok_s=2.0 ** -10)
+    s0, nt = 8, 4
+    exact = cal.prefill_s(1, s0) + (nt - 1) * cal.step_s()
+    req = lambda d: [Request(rid=0, arrival_s=0.0,
+                             prompt=np.zeros(s0, np.int32), new_tokens=nt,
+                             deadline_s=d)]
+    for shed in (False, True):
+        rep = ContinuousBatchingScheduler(eng, policy="idle_waiting",
+                                          execute=False, calibration=cal,
+                                          shed=shed).run(req(exact))
+        rec = rep.records[0]
+        assert rec.latency_s == exact  # exact ledger arithmetic
+        assert not rec.missed and not rec.shed
+        assert rep.missed == 0 and rep.shed == 0 and rep.items == 1
+        # one ulp tighter flips the verdict: shed up front when admission
+        # control is on, a missed completion when it is off
+        tight = ContinuousBatchingScheduler(eng, policy="idle_waiting",
+                                            execute=False, calibration=cal,
+                                            shed=shed).run(
+            req(float(np.nextafter(exact, 0.0))))
+        if shed:
+            assert tight.shed == 1 and tight.items == 0
+        else:
+            assert tight.missed == 1 and tight.items == 1
+
+
+def test_deadline_below_minimum_prefill_shed_vs_missed():
+    """A deadline shorter than the bare prefill cost is infeasible for ANY
+    schedule: admission control sheds it for zero tokens and zero request
+    energy, while shed=False serves it anyway and books the miss — the two
+    policies must agree it cannot be on time."""
+    from repro.serving.load import Request
+
+    eng = _engine("whisper-tiny", max_batch=2, max_len=64)
+    cal = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                           prefill_per_tok_s=0.001)
+    s0 = 8
+    reqs = [Request(rid=0, arrival_s=0.0, prompt=np.zeros(s0, np.int32),
+                    new_tokens=4, deadline_s=0.5 * cal.prefill_s(1, s0))]
+    shed_rep = ContinuousBatchingScheduler(eng, policy="idle_waiting",
+                                           execute=False, calibration=cal,
+                                           shed=True).run(reqs)
+    assert shed_rep.shed == 1 and shed_rep.items == 0
+    rec = shed_rep.records[0]
+    assert rec.shed and rec.tokens == [] and rec.energy_j == 0.0
+    assert shed_rep.wasted_energy_j == 0.0  # shed pre-admission: nothing sunk
+    serve = ContinuousBatchingScheduler(eng, policy="idle_waiting",
+                                        execute=False, calibration=cal,
+                                        shed=False).run(reqs)
+    assert serve.shed == 0 and serve.missed == 1 and serve.items == 1
+    assert len(serve.records[0].tokens) == 4  # served to completion anyway
+    # serving the doomed request burns energy shedding saves
+    assert serve.energy_j > shed_rep.energy_j
+    assert serve.wasted_energy_j == serve.records[0].energy_j
+
+
+def test_missed_accounting_consistent_across_modes():
+    """One overloaded deadline stream through blocking, chunked, and
+    speculative scheduling: in every mode a record is missed iff its latency
+    exceeds its deadline, the report's ``missed`` matches the per-record
+    count, and with shed=False nothing is ever dropped."""
+    eng = InferenceEngine(get_reduced_config("whisper-tiny"),
+                          sc=ServeConfig(max_batch=4, max_len=64, spec_slack=4))
+    cal = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                           prefill_per_tok_s=5e-4)
+    reqs = bursty_stream(24, fast_rate_hz=2000.0, slow_rate_hz=20.0, seed=5,
+                         vocab_size=64, prompt_lens=(8, 16),
+                         new_tokens=(4, 12), deadline_s=0.05)
+    for mode_kw in (dict(), dict(prefill_chunk=8), dict(speculate_k=4)):
+        rep = ContinuousBatchingScheduler(eng, policy="adaptive",
+                                          execute=False, calibration=cal,
+                                          **mode_kw).run(reqs)
+        assert rep.items == 24 and rep.shed == 0 and rep.failed == 0
+        assert rep.missed == sum(r.missed for r in rep.records)
+        for r in rep.records:
+            assert r.missed == (r.latency_s > 0.05)
+        assert rep.missed > 0  # the burst genuinely overloads the pool
 
 
 def test_virtual_scheduler_deterministic_and_continuous_wins():

@@ -98,7 +98,7 @@ def test_verify_accept_all_and_accept_0():
         drafts[0] = (ref[i:i + 3] + [0] * 3)[:3]          # oracle drafts
         drafts[1] = [(t + 1) % eng.cfg.vocab_size          # always wrong
                      for t in (ref[len(t_bad):len(t_bad) + 3] + [0] * 3)[:3]]
-        out, acc = eng.masked_speculative_step(pool, drafts)
+        out, acc, _ = eng.masked_speculative_step(pool, drafts)
         ticks += 1
         assert acc[1] == 0  # wrong drafts never accepted
         if len(t_good) < 8:
