@@ -42,6 +42,25 @@ quarantine-and-retry. Gated: shedding must not lose on-time completions per
 joule vs serving everything, and every non-shed request must complete under
 the fault profile.
 
+Two paged-KV scenarios (``serving/pages.py``) close out the file:
+
+  serve_paged_capacity       the SAME HBM byte budget — set by a contiguous
+                             pool's ``cache_bytes`` — is re-spent on a paged
+                             pool (``paged_cache_bytes``), and a burst of
+                             short requests measures peak concurrency.
+                             Contiguous slots own max_len rows whether used
+                             or not; pages are allocated per occupied block,
+                             so the same bytes hold ≥ 2x the requests
+                             (gated: ``paged_capacity_multiplier``).
+  serve_shared_prefix        a common-system-prompt stream (one shared
+                             prefix, random tails) served chunked two ways:
+                             contiguous (every prompt prefilled in full) vs
+                             paged with copy-on-write prefix reuse (resident
+                             prefix pages mapped read-only, only the tail
+                             chunk-prefilled). Gated: prefill energy saved
+                             must show up as ``shared_prefix_items_per_j_gain``
+                             >= 1 with zero COW copies on a read-only prefix.
+
 Reported per mode: items/J, p50/p99 latency, reloads, accepted/tick;
 headline ratios go into the BENCH_<timestamp>.json artifact (via
 benchmarks/run.py, or standalone: ``python benchmarks/serve_bench.py
@@ -57,7 +76,13 @@ import numpy as np
 from repro.configs import get_reduced_config
 from repro.serving.engine import InferenceEngine, ServeConfig
 from repro.serving.faults import make_profile
-from repro.serving.load import bursty_stream, flash_crowd_stream
+from repro.serving.kv_cache import cache_bytes, paged_cache_bytes
+from repro.serving.load import (
+    bursty_stream,
+    flash_crowd_stream,
+    poisson_stream,
+    shared_prefix_stream,
+)
 from repro.serving.scheduler import (
     ContinuousBatchingScheduler,
     FixedCalibration,
@@ -80,6 +105,9 @@ PROMPT_PERIOD = 4       # repetitive (templated) prompts — see load.py
 # overload scenario: shorter budgets keep the three extra runs cheap while
 # the spike still drives queueing delay far past the deadline
 OVERLOAD_NEW_TOKENS = (8, 24)
+# shared-prefix scenario: short decodes keep the run PREFILL-dominated —
+# the phase copy-on-write prefix reuse actually accelerates
+NEW_TOKENS_SHARED = (4, 16)
 
 
 def run(arch: str = "whisper-tiny", n: int = 96, max_batch: int = 8,
@@ -222,6 +250,136 @@ def run_overload(arch: str = "whisper-tiny", n: int = 64, max_batch: int = 8,
     }
 
 
+def run_paged_capacity(arch: str = "granite-3-8b", n: int = 32,
+                       contig_batch: int = 4, paged_batch: int = 16,
+                       page_size: int = 16, seed: int = 0) -> dict:
+    """Concurrent capacity at a FIXED HBM byte budget. A contiguous pool of
+    ``contig_batch`` slots sets the budget (every slot owns max_len rows up
+    front); the paged pool re-spends those bytes as ``num_pages`` shared
+    pages and admits by actual block demand, so a burst of short requests
+    packs >= 2x as many concurrent decodes into the same memory. Gated:
+    ``paged_capacity_multiplier`` (peak concurrently active slots, paged /
+    contiguous). Always executes for real — the virtual pool used by
+    ``--no-execute`` has no page accounting to measure."""
+    cfg = get_reduced_config(arch)
+    max_len = 96
+    budget = cache_bytes(cfg, batch=contig_batch, max_len=max_len)
+    # mirror PagedSlotPool sizing (slack=0): one page of headroom plus one
+    # spare block keeps a full-length sequence inside the table
+    max_blocks = -(-(max_len + page_size) // page_size) + 1
+    # paged bytes are affine in num_pages: solve for the budget's capacity
+    b1 = paged_cache_bytes(cfg, batch=paged_batch, num_pages=1,
+                           page_size=page_size, max_blocks=max_blocks)
+    b2 = paged_cache_bytes(cfg, batch=paged_batch, num_pages=2,
+                           page_size=page_size, max_blocks=max_blocks)
+    per_page = b2 - b1
+    num_pages = int((budget - (b1 - per_page)) // per_page)
+    paged_bytes = paged_cache_bytes(cfg, batch=paged_batch,
+                                    num_pages=num_pages, page_size=page_size,
+                                    max_blocks=max_blocks)
+    assert paged_bytes <= budget and num_pages > paged_batch
+
+    cal = FixedCalibration(step_s=STEP_S, prefill_base_s=PREFILL_BASE_S,
+                           prefill_per_tok_s=PREFILL_TOK_S,
+                           verify_per_tok_s=VERIFY_TOK_S)
+    s0, toks = 8, 8  # short requests: ~1 block each of page_size=16 rows
+    service = PREFILL_BASE_S + PREFILL_TOK_S * s0 + toks * STEP_S
+    # the whole burst arrives well inside one request's service time, so
+    # peak concurrency is limited by the pool, not the arrival process
+    reqs = poisson_stream(n, rate_hz=8.0 * paged_batch / service, seed=seed,
+                          vocab_size=cfg.vocab_size, prompt_lens=(s0,),
+                          new_tokens=(toks, toks))
+    kw = dict(policy="adaptive", execute=True, calibration=cal)
+    contig = InferenceEngine(cfg, sc=ServeConfig(max_batch=contig_batch,
+                                                 max_len=max_len))
+    crep = ContinuousBatchingScheduler(contig, **kw).run(reqs)
+    pagede = InferenceEngine(cfg, sc=ServeConfig(
+        max_batch=paged_batch, max_len=max_len, paged=True,
+        page_size=page_size, num_pages=num_pages))
+    prep = ContinuousBatchingScheduler(pagede, **kw).run(reqs)
+    mult = prep.peak_active / max(crep.peak_active, 1)
+    print(f"\n{arch}: paged capacity at fixed HBM budget "
+          f"({budget / 1e6:.2f} MB = {contig_batch} contiguous slots), "
+          f"{n} short requests")
+    print(f"  [contiguous ] peak {crep.peak_active:2d} active "
+          f"({cache_bytes(cfg, batch=contig_batch, max_len=max_len) / 1e6:.2f} MB) "
+          + crep.summary())
+    print(f"  [paged      ] peak {prep.peak_active:2d} active "
+          f"({paged_bytes / 1e6:.2f} MB, {num_pages} pages of {page_size}) "
+          + prep.summary())
+    print(f"  same bytes hold {mult:.2f}x the concurrent requests")
+    return {
+        "hbm_budget_mb": budget / 1e6,
+        "paged_bytes_mb": paged_bytes / 1e6,
+        "num_pages": num_pages,
+        "page_size": page_size,
+        "contig_peak_active": crep.peak_active,
+        "paged_peak_active": prep.peak_active,
+        "paged_capacity_multiplier": mult,
+        "contig_items_per_j": crep.items_per_joule,
+        "paged_items_per_j": prep.items_per_joule,
+        "contig_p99_ms": crep.p99_s * 1e3,
+        "paged_p99_ms": prep.p99_s * 1e3,
+    }
+
+
+def run_shared_prefix(arch: str = "granite-3-8b", n: int = 12,
+                      max_batch: int = 4, page_size: int = 8,
+                      chunk: int = 8, seed: int = 0) -> dict:
+    """Shared-prefix prefill efficiency on common-system-prompt traffic.
+    Every prompt is one 48-token prefix plus an 8-token random tail; request
+    0 warms the prefix registry, then paged admission maps the resident
+    prefix pages read-only (copy-on-write guards them) and chunk-prefills
+    only the tail — the contiguous baseline prefills every prompt in full.
+    Gated: ``shared_prefix_items_per_j_gain`` >= 1 (the skipped prefill
+    energy must reach the ledger). Always executes for real — prefix
+    matching needs the actual page registry."""
+    cfg = get_reduced_config(arch)
+    max_len, prefix_len, tail_len = 96, 48, 8
+    cal = FixedCalibration(step_s=STEP_S, prefill_base_s=PREFILL_BASE_S,
+                           prefill_per_tok_s=PREFILL_TOK_S,
+                           verify_per_tok_s=VERIFY_TOK_S)
+    s0 = prefix_len + tail_len
+    service = (PREFILL_BASE_S + PREFILL_TOK_S * s0
+               + float(np.mean(NEW_TOKENS_SHARED)) * STEP_S)
+    reqs = shared_prefix_stream(n, rate_hz=2.0 / service,
+                                prefix_len=prefix_len, tail_len=tail_len,
+                                warm_s=3.0 * service, seed=seed,
+                                vocab_size=cfg.vocab_size,
+                                new_tokens=NEW_TOKENS_SHARED)
+    kw = dict(policy="adaptive", execute=True, calibration=cal,
+              prefill_chunk=chunk)
+    contig = InferenceEngine(cfg, sc=ServeConfig(max_batch=max_batch,
+                                                 max_len=max_len))
+    crep = ContinuousBatchingScheduler(contig, **kw).run(reqs)
+    shared = InferenceEngine(cfg, sc=ServeConfig(
+        max_batch=max_batch, max_len=max_len, paged=True,
+        page_size=page_size, share_prefix=True))
+    srep = ContinuousBatchingScheduler(shared, **kw).run(reqs)
+    gain = srep.items_per_joule / crep.items_per_joule
+    print(f"\n{arch}: shared-prefix stream, {n} requests of "
+          f"{prefix_len}+{tail_len} tokens, chunk={chunk}, page={page_size}")
+    print(f"  [full prefill] {crep.chunks} chunks " + crep.summary())
+    print(f"  [prefix reuse] {srep.chunks} chunks, "
+          f"{srep.shared_hit_pages} shared page hits, "
+          f"{srep.cow_copies} COW copies " + srep.summary())
+    print(f"  prefix reuse: {gain:.2f}x items/J "
+          f"({crep.chunks - srep.chunks} chunk ticks saved)")
+    return {
+        "prefix_len": prefix_len,
+        "tail_len": tail_len,
+        "contig_items_per_j": crep.items_per_joule,
+        "shared_items_per_j": srep.items_per_joule,
+        "shared_prefix_items_per_j_gain": gain,
+        "contig_chunks": crep.chunks,
+        "shared_chunks": srep.chunks,
+        "shared_hit_pages": srep.shared_hit_pages,
+        "cow_copies": srep.cow_copies,
+        "contig_p99_ms": crep.p99_s * 1e3,
+        "shared_p99_ms": srep.p99_s * 1e3,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small stream (CI smoke)")
@@ -250,6 +408,10 @@ def main(argv=None) -> int:
     overload = run_overload(arch=args.arch, n=n_over, max_batch=batch,
                             seed=args.seed, execute=not args.no_execute,
                             fault_spec=args.fault_profile)
+    n_cap = 24 if args.quick else 32
+    capacity = run_paged_capacity(n=n_cap, seed=args.seed)
+    n_shared = 8 if args.quick else 12
+    shared = run_shared_prefix(n=n_shared, seed=args.seed)
 
     stamp = datetime.now(timezone.utc).strftime("%Y%m%d-%H%M%S")
     out_dir = Path(args.out)
@@ -272,6 +434,16 @@ def main(argv=None) -> int:
             "max_batch": batch,
             "fault_profile": args.fault_profile,
             "derived": {k: float(v) for k, v in overload.items()},
+        }, {
+            "name": "serve_paged_capacity",
+            "arch": "granite-3-8b",
+            "n_requests": n_cap,
+            "derived": {k: float(v) for k, v in capacity.items()},
+        }, {
+            "name": "serve_shared_prefix",
+            "arch": "granite-3-8b",
+            "n_requests": n_shared,
+            "derived": {k: float(v) for k, v in shared.items()},
         }],
     }, indent=1, sort_keys=True))
     print(f"\nwrote {artifact}")

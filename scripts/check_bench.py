@@ -27,6 +27,16 @@ claims as floors:
                               retry must lose NOTHING admission control
                               kept)                               >= 1.0
 
+  serve_paged_capacity (DETERMINISTIC — same fixed cost model):
+    paged_capacity_multiplier   peak concurrent requests at a FIXED HBM
+                                byte budget, paged KV pool vs contiguous
+                                slots                             >= 2.0
+
+  serve_shared_prefix (DETERMINISTIC — same fixed cost model):
+    shared_prefix_items_per_j_gain  items/J on a common-system-prompt
+                                stream, paged copy-on-write prefix reuse
+                                vs full per-request prefill       >= 1.0
+
   paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
   so the floor is a catastrophic-regression guard, not the real margin; the
   committed full-run artifacts hold the true speedups):
@@ -60,6 +70,12 @@ OVERLOAD_CHECKS = (
     ("shed_goodput_per_j_gain", 1.0),
     ("fault_completed_frac", 1.0),
 )
+PAGED_CHECKS = (
+    ("paged_capacity_multiplier", 2.0),
+)
+SHARED_CHECKS = (
+    ("shared_prefix_items_per_j_gain", 1.0),
+)
 LSTM_CHECKS = (
     ("tpu_seq_speedup", 1.0),
     ("tpu_q8_speedup", 1.0),
@@ -68,6 +84,8 @@ LSTM_CHECKS = (
 CHECKS = {
     "serve_continuous_batching": ("tol", SERVE_CHECKS),
     "serve_overload_robustness": ("tol", OVERLOAD_CHECKS),
+    "serve_paged_capacity": ("tol", PAGED_CHECKS),
+    "serve_shared_prefix": ("tol", SHARED_CHECKS),
     "paper_lstm_C1_C2": ("tol_lstm", LSTM_CHECKS),
 }
 

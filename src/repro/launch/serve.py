@@ -20,6 +20,20 @@ Modes:
   strategies   the offline gap-trace strategy comparison
                (WorkloadAwareServer)
 
+Memory (any scheduler mode):
+  --paged           paged KV cache (serving/pages.py): slots map logical
+                    blocks of --page-size cache rows onto shared physical
+                    pages instead of owning a max_len rectangle; admission
+                    is page-budget aware, speculative verify needs no
+                    spec_slack spare rows
+  --page-size       cache rows per physical page (default 16)
+  --share-prefix    copy-on-write shared-prefix reuse: admissions whose
+                    prompt matches a registered block-aligned prefix map
+                    the resident pages read-only and prefill only the delta
+                    (paged only; disabled for SSM/hybrid/frontend families)
+  In compare mode a fifth row serves the stream on a paged pool and the
+  table reports the HBM bytes of both cache layouts.
+
 Robustness (any scheduler mode):
   --fault-profile   inject deterministic faults: a named profile
                     ("none"/"light"/"heavy") or a spec string like
@@ -57,6 +71,7 @@ from repro.core.workload import bursty_trace, irregular_trace, regular_trace
 from repro.serving.engine import InferenceEngine, ServeConfig, WorkloadAwareServer
 from repro.core.retry import RestartPolicy
 from repro.serving.faults import make_profile
+from repro.serving.kv_cache import cache_bytes, paged_cache_bytes
 from repro.serving.load import (
     bursty_stream_for_service,
     diurnal_stream,
@@ -142,6 +157,16 @@ def main(argv=None) -> int:
     ap.add_argument("--queue-limit", type=int, default=0,
                     help="shed arrivals once the ready queue holds this many "
                          "requests (0 = unbounded)")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="paged KV cache: shared physical pages + page table "
+                         "instead of per-slot max_len rectangles")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache rows per physical page (with --paged)")
+    ap.add_argument("--share-prefix", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="copy-on-write shared-prefix reuse across requests "
+                         "(with --paged; attention families only)")
     ap.add_argument("--policy", default="adaptive",
                     choices=("on_off", "idle_waiting", "slow_down", "adaptive"))
     ap.add_argument("--trace", default="regular",
@@ -157,10 +182,17 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch)
-    slack = args.speculate_k if args.mode in ("speculative", "compare") else 0
+    # paged pools need no spec_slack spare rows: verify-window tail blocks
+    # are allocated on demand out of the page pool
+    slack = (args.speculate_k
+             if args.mode in ("speculative", "compare") and not args.paged
+             else 0)
     engine = InferenceEngine(cfg, sc=ServeConfig(max_batch=args.batch,
                                                  max_len=args.max_len,
-                                                 spec_slack=slack))
+                                                 spec_slack=slack,
+                                                 paged=args.paged,
+                                                 page_size=args.page_size,
+                                                 share_prefix=args.share_prefix))
 
     if args.mode == "strategies":
         server = WorkloadAwareServer(engine, chips=args.chips)
@@ -197,7 +229,7 @@ def main(argv=None) -> int:
                               max_backoff_s=64 * step)
     robust = dict(shed=args.shed,
                   queue_limit=args.queue_limit or None,
-                  faults=faults if faults.enabled else None,
+                  faults=faults if faults is not None and faults.enabled else None,
                   retry=retry)
     sched = ContinuousBatchingScheduler(
         engine, policy=args.policy, chips=args.chips, calibration=cal,
@@ -223,6 +255,29 @@ def main(argv=None) -> int:
                                   chips=args.chips, calibration=cal,
                                   flush_s=16 * mean_service_s(cal))
         print("  " + stat.summary())
+        if args.paged:
+            psched, prep = sched, rep  # the main rows already ran paged
+        else:
+            peng = InferenceEngine(cfg, params=engine.params, sc=ServeConfig(
+                max_batch=args.batch, max_len=args.max_len, paged=True,
+                page_size=args.page_size, share_prefix=args.share_prefix))
+            psched = ContinuousBatchingScheduler(
+                peng, policy=args.policy, chips=args.chips, calibration=cal,
+                **robust)
+            prep = psched.run(reqs)
+            print("  " + prep.summary() + " [paged]")
+        pool = psched.pool
+        contig_b = cache_bytes(cfg, batch=args.batch,
+                               max_len=args.max_len + slack)
+        paged_b = paged_cache_bytes(cfg, batch=args.batch,
+                                    num_pages=pool.num_pages,
+                                    page_size=pool.page,
+                                    max_blocks=pool.max_blocks)
+        print(f"  KV-cache HBM at parity sizing: contiguous "
+              f"{contig_b / 1e6:.3f} MB vs paged {paged_b / 1e6:.3f} MB "
+              f"({pool.num_pages} pages of {pool.page} rows); "
+              f"shared page hits={prep.shared_hit_pages}, "
+              f"COW copies={prep.cow_copies}")
         print(f"  continuous/static items-per-J: "
               f"{rep.items_per_joule / stat.items_per_joule:.2f}x, "
               f"p50 speedup: {stat.p50_s / rep.p50_s:.2f}x, "

@@ -640,3 +640,47 @@ def _mask_pad_logits(logits, cfg: ArchConfig):
     if v > cfg.vocab_size:
         return jnp.where(jnp.arange(v) < cfg.vocab_size, logits, -1e30)
     return logits
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache bridges (serving/pages.py)
+# ---------------------------------------------------------------------------
+# The decode/verify bodies above are layout-agnostic: they see a per-slot
+# contiguous cache row and write positions [pos, pos+T) through the strict
+# positional masks in models/layers.py. The paged serving path reuses them
+# unchanged by (a) gathering a slot's pages into a VIRTUAL contiguous row
+# through its page-table row, and (b) extracting the written blocks back out
+# for a scatter by page id. Rows gathered from unmapped blocks (the scratch
+# page) are garbage, but the positional masks select NEG_INF for every
+# position > pos before the softmax, so they are exactly inert in f32.
+
+
+def paged_virtual_cache(pages, table_row):
+    """Gather one slot's virtual contiguous cache row.
+
+    pages: (lead, num_pages, page_size, *tail); table_row: (max_blocks,)
+    int32 → (lead, max_blocks * page_size, *tail)."""
+    g = jnp.take(pages, table_row, axis=1)  # (lead, max_blocks, page, *tail)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def paged_written_blocks(row, first_blk, n_blocks, page_size):
+    """Extract ``n_blocks`` whole blocks of a virtual cache row starting at
+    traced block index ``first_blk``.
+
+    row: (lead, S, *tail) → (n_blocks, lead, page_size, *tail). The row is
+    padded by the slice width first so ``dynamic_slice`` never clamps the
+    start (a clamp would silently misalign block boundaries)."""
+    span = n_blocks * page_size
+    widths = [(0, 0), (0, span)] + [(0, 0)] * (row.ndim - 2)
+    padded = jnp.pad(row, widths)
+    w = jax.lax.dynamic_slice_in_dim(padded, first_blk * page_size, span, axis=1)
+    w = w.reshape(w.shape[0], n_blocks, page_size, *w.shape[2:])
+    return jnp.moveaxis(w, 1, 0)
+
+
+def verify_block_span(window: int, page_size: int) -> int:
+    """Worst-case whole blocks a verify window of ``window`` tokens can touch
+    (window starting at the last row of a block spills ceil((window-1)/page)
+    more blocks)."""
+    return 1 + (window + page_size - 2) // page_size

@@ -35,12 +35,16 @@ from repro.models.model import (
     decode_verify,
     encoder_cross_cache,
     init_model,
+    paged_virtual_cache,
+    paged_written_blocks,
     prefill,
     prefill_chunk,
+    verify_block_span,
 )
 from repro.models.params import init_params
 from repro.serving.faults import FaultProfile
-from repro.serving.kv_cache import cache_defs
+from repro.serving.kv_cache import cache_defs, paged_keys
+from repro.serving.pages import PagedSlotPool
 from repro.serving.slots import SlotPool, grow_cache
 
 
@@ -72,6 +76,19 @@ class ServeConfig:
     # reads it from here unless given one explicitly, so an (engine, config)
     # pair pins a reproducible chaos run; None = no injected faults
     faults: FaultProfile | None = None
+    # paged KV cache (serving/pages.py): slots map logical blocks of
+    # page_size cache rows onto shared physical pages through a dense page
+    # table instead of owning a contiguous max_len+slack rectangle. Verify
+    # windows need no spec_slack here (the table always has spare blocks);
+    # num_pages=None sizes the pool for contiguous parity (fit everything),
+    # smaller values trade HBM for admission-control backpressure
+    paged: bool = False
+    page_size: int = 16
+    num_pages: int | None = None
+    # copy-on-write sharing of block-aligned prompt prefixes between
+    # requests (paged only; common-system-prompt traffic prefills the
+    # shared prefix once)
+    share_prefix: bool = False
 
 
 class InferenceEngine:
@@ -113,6 +130,13 @@ class InferenceEngine:
         # fault injection: overwrite one slot's cache rows with NaN (the
         # slot index is traced, so all slots share one compile)
         self._poison = jax.jit(self._poison_impl, donate_argnums=(0,))
+        # paged twins of the masked decode/verify jits: same per-slot bodies,
+        # but each slot's contiguous cache row is GATHERED through its page-
+        # table row at jit entry and the written blocks are scattered back by
+        # page id at exit — the dense int32 table is just another traced
+        # argument, so the paged path also keeps one compile signature
+        self._paged_decode = jax.jit(self._paged_decode_impl, donate_argnums=(1,))
+        self._paged_verify = jax.jit(self._paged_verify_impl, donate_argnums=(1,))
         # physical cache rows per slot: the admission bound plus the
         # speculative verify slack (see ServeConfig.spec_slack)
         self.capacity = self.sc.max_len + self.sc.spec_slack
@@ -146,6 +170,12 @@ class InferenceEngine:
 
     # -- continuous-batching execution path ---------------------------------
     def make_pool(self) -> SlotPool:
+        if self.sc.paged:
+            return PagedSlotPool(
+                self.cfg, max_batch=self.sc.max_batch,
+                max_len=self.sc.max_len, page_size=self.sc.page_size,
+                slack=self.sc.spec_slack, num_pages=self.sc.num_pages,
+                share_prefix=self.sc.share_prefix)
         return SlotPool(self.cfg, max_batch=self.sc.max_batch,
                         max_len=self.sc.max_len, slack=self.sc.spec_slack)
 
@@ -165,9 +195,11 @@ class InferenceEngine:
                              f"max_len {self.sc.max_len}")
         logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None],
                                       self._frontend_stub(1))
-        cache = grow_cache(self.cfg, cache, self.capacity)
+        if not isinstance(pool, PagedSlotPool):
+            cache = grow_cache(self.cfg, cache, self.capacity)
         first = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
-        pool.admit(slot, cache, rid=rid, pos=s0, budget=budget, first_tok=first)
+        pool.admit(slot, cache, rid=rid, pos=s0, budget=budget, first_tok=first,
+                   prompt=prompt)
         return first
 
     def masked_decode_step(self, pool: SlotPool) -> tuple[np.ndarray, np.ndarray]:
@@ -190,6 +222,25 @@ class InferenceEngine:
         advancement, retirement) is the scheduler's job; this only advances
         the device state.
         """
+        if isinstance(pool, PagedSlotPool):
+            # every decoding slot writes exactly position pos this tick:
+            # allocate/COW its block up-front so the write never lands in a
+            # shared or unmapped page
+            for s in pool.decoding_slots():
+                p = pool.slots[s].pos
+                pool.ensure_writable(s, p, p + 1)
+            (nxt, fin), pool.cache = self._paged_decode(
+                self.params, pool.cache, jnp.asarray(pool.tok),
+                jnp.asarray(pool.positions()), jnp.asarray(pool.decode_mask()),
+                jnp.asarray(pool.table),
+            )
+            nxt, fin = np.asarray(nxt), np.asarray(fin)
+            if not bool(fin[pool.decode_mask()].all()):
+                # a non-finite slot may have scattered NaN into the scratch
+                # page (which every unmapped block gathers) — scrub before
+                # the next tick's gather
+                pool.scrub_scratch()
+            return nxt, fin
         (nxt, fin), pool.cache = self._masked_decode(
             self.params, pool.cache, jnp.asarray(pool.tok),
             jnp.asarray(pool.positions()), jnp.asarray(pool.decode_mask()),
@@ -219,6 +270,44 @@ class InferenceEngine:
         return jax.vmap(one, in_axes=(1, 0, 0), out_axes=((0, 0), 1))(
             cache, tok, pos)
 
+    def _paged_decode_impl(self, params, cache, tok, pos, active, table):
+        """Paged twin of ``_masked_decode_impl``: gather each slot's virtual
+        contiguous row through its table row, run the identical per-slot
+        decode body, scatter the written block back by page id.
+
+        Rows gathered from unmapped blocks (scratch) are garbage, but every
+        position > pos is masked to NEG_INF before the softmax, so they are
+        exactly inert — the paged step is token-for-token the contiguous
+        step in f32. Inactive slots' writes are redirected to page 0."""
+        cfg, page = self.cfg, self.sc.page_size
+        pkeys = paged_keys(cfg)
+        paged = {k: cache[k] for k in pkeys}
+        rest = {k: v for k, v in cache.items() if k not in pkeys}
+        pos = jnp.where(active, pos, 0)
+
+        def one(rest_b, tok_b, pos_b, tab_b, act_b):
+            virt = {k: paged_virtual_cache(paged[k], tab_b) for k in pkeys}
+            c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1),
+                              {**rest_b, **virt})
+            logits, c1 = decode_step(params, c1, tok_b[None, None], pos_b, cfg)
+            c1 = jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
+            v = logits[0, : cfg.vocab_size]
+            nxt = jnp.argmax(v).astype(jnp.int32)
+            fin = jnp.isfinite(v).all()
+            blk = pos_b // page
+            written = {k: paged_written_blocks(c1[k], blk, 1, page)[0]
+                       for k in pkeys}
+            pid = jnp.where(act_b, jnp.take(tab_b, blk), 0)
+            return (nxt, fin, written, pid), {k: c1[k] for k in rest}
+
+        (nxt, fin, written, pids), rest1 = jax.vmap(
+            one, in_axes=(1, 0, 0, 0, 0), out_axes=((0, 0, 0, 0), 1))(
+            rest, tok, pos, table, active)
+        for k in pkeys:
+            paged[k] = paged[k].at[:, pids].set(
+                jnp.moveaxis(written[k], 0, 1))
+        return (nxt, fin), {**rest1, **paged}
+
     # -- fault injection ------------------------------------------------------
     def poison_slot(self, pool: SlotPool, slot: int) -> None:
         """Overwrite ``slot``'s cache rows with NaN (injected fault: HBM
@@ -227,6 +316,11 @@ class InferenceEngine:
         guard reports — the recovery path (quarantine + re-prefill) is the
         scheduler's job."""
         assert pool.cache is not None, "cannot poison a virtual pool"
+        if isinstance(pool, PagedSlotPool):
+            # COW-aware: force-exclusive then corrupt, so shared prefix pages
+            # and the registry keep clean bytes (see PagedSlotPool.poison)
+            pool.poison(slot)
+            return
         pool.cache = self._poison(pool.cache, jnp.int32(slot))
 
     @staticmethod
@@ -261,7 +355,10 @@ class InferenceEngine:
                              f"{budget - emitted} exceeds max_len {self.sc.max_len}")
         _, cache = self._prefill(self.params, jnp.asarray(context)[None],
                                  self._frontend_stub(1))
-        cache = grow_cache(self.cfg, cache, self.capacity)
+        if not isinstance(pool, PagedSlotPool):
+            cache = grow_cache(self.cfg, cache, self.capacity)
+        # prompt=None: a resume context includes emitted tokens, which must
+        # never enter the shared-prefix registry
         pool.admit(slot, cache, rid=rid, pos=s, budget=budget,
                    first_tok=next_tok, emitted=emitted)
 
@@ -294,6 +391,26 @@ class InferenceEngine:
         drafts = np.asarray(drafts, np.int32)
         k = drafts.shape[1]
         assert drafts.shape == (pool.max_batch, k) and k >= 1
+        if isinstance(pool, PagedSlotPool):
+            # no spec_slack spare rows needed: the verify window's tail
+            # blocks are allocated on demand — just check the table can hold
+            # the worst-case window (start as late as max_len-2)
+            assert (pool.max_len - 2 + k) // pool.page + 1 <= pool.max_blocks, (
+                f"verify window of {k + 1} tokens exceeds the page table "
+                f"({pool.max_blocks} blocks of {pool.page}) — raise "
+                f"spec_slack or page_size")
+            for s in pool.decoding_slots():
+                p = pool.slots[s].pos
+                pool.ensure_writable(s, p, p + k + 1)
+            (toks, acc, fin), pool.cache = self._paged_verify(
+                self.params, pool.cache, jnp.asarray(pool.tok),
+                jnp.asarray(drafts), jnp.asarray(pool.positions()),
+                jnp.asarray(pool.decode_mask()), jnp.asarray(pool.table),
+            )
+            toks, acc, fin = np.asarray(toks), np.asarray(acc), np.asarray(fin)
+            if not bool(fin[pool.decode_mask()].all()):
+                pool.scrub_scratch()
+            return toks, acc, fin
         assert pool.slack >= k, (
             f"speculative verify of {k} drafts needs spec_slack >= {k} "
             f"spare cache rows (have {pool.slack}) — see ServeConfig.spec_slack")
@@ -329,6 +446,57 @@ class InferenceEngine:
         return jax.vmap(one, in_axes=(1, 0, 0), out_axes=((0, 0, 0), 1))(
             cache, tokens, pos)
 
+    def _paged_verify_impl(self, params, cache, tok, drafts, pos, active, table):
+        """Paged twin of ``_masked_verify_impl``: gather, verify, scatter.
+
+        A K+1 window can straddle up to ``verify_block_span`` blocks; all of
+        them are extracted, and blocks past the slot's last written block —
+        plus everything from inactive slots — are redirected to scratch page
+        0, so rejected-draft tails overwrite only pages the slot owns (the
+        contiguous pool needs spec_slack spare rows for exactly this)."""
+        cfg, page = self.cfg, self.sc.page_size
+        pkeys = paged_keys(cfg)
+        paged = {k: cache[k] for k in pkeys}
+        rest = {k: v for k, v in cache.items() if k not in pkeys}
+        pos = jnp.where(active, pos, 0)
+        tokens = jnp.concatenate([tok[:, None], drafts], axis=1)  # (B, K+1)
+        w = tokens.shape[1]
+        nw = verify_block_span(w, page)
+        mb = table.shape[1]
+
+        def one(rest_b, toks_b, pos_b, tab_b, act_b):
+            virt = {k: paged_virtual_cache(paged[k], tab_b) for k in pkeys}
+            c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1),
+                              {**rest_b, **virt})
+            logits, c1 = decode_verify(params, c1, toks_b[None, :], pos_b, cfg)
+            v = logits[0, :, : cfg.vocab_size]
+            g = jnp.argmax(v, axis=-1).astype(jnp.int32)
+            fin = jnp.isfinite(v).all()
+            ok = jnp.cumprod((toks_b[1:] == g[:-1]).astype(jnp.int32))
+            a = jnp.sum(ok).astype(jnp.int32)
+            c1 = commit_verify(c1, a, cfg)
+            c1 = jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
+            first_blk = pos_b // page
+            last_blk = (pos_b + w - 1) // page
+            written = {k: paged_written_blocks(c1[k], first_blk, nw, page)
+                       for k in pkeys}
+            blks = first_blk + jnp.arange(nw)
+            valid = act_b & (blks <= last_blk)
+            pids = jnp.where(valid,
+                             jnp.take(tab_b, jnp.minimum(blks, mb - 1)), 0)
+            return (g, a, fin, written, pids), {k: c1[k] for k in rest}
+
+        (g, a, fin, written, pids), rest1 = jax.vmap(
+            one, in_axes=(1, 0, 0, 0, 0), out_axes=((0, 0, 0, 0, 0), 1))(
+            rest, tokens, pos, table, active)
+        flat = pids.reshape(-1)  # (B * nw,) — duplicates only ever hit scratch
+        for k in pkeys:
+            wr = written[k]  # (B, nw, lead, page, *tail)
+            wr = jnp.moveaxis(wr, 2, 0)  # (lead, B, nw, page, *tail)
+            wr = wr.reshape(wr.shape[0], -1, page, *wr.shape[4:])
+            paged[k] = paged[k].at[:, flat].set(wr)
+        return (g, a, fin), {**rest1, **paged}
+
     # -- chunked prefill ------------------------------------------------------
     def begin_chunked_prefill(self, pool: SlotPool, slots: list[int],
                               prompts: np.ndarray, *, rids: list[int],
@@ -349,28 +517,47 @@ class InferenceEngine:
             if s0 + budget > self.sc.max_len:
                 raise ValueError(f"request {rid}: prompt {s0} + budget {budget} "
                                  f"exceeds max_len {self.sc.max_len}")
-        for slot, rid in zip(slots, rids):
+        paged = isinstance(pool, PagedSlotPool)
+        # shared-prefix hit: every member maps the common block-aligned
+        # prefix read-only and chunk-prefills only its delta. The group is
+        # formed over requests with the SAME match length, so the min is a
+        # no-op for scheduler-formed groups and a guard for direct callers.
+        shared_len, pins = 0, None
+        if paged and pool.share_prefix:
+            shared_len = min(pool.match_prefix_len(p) for p in prompts)
+            if shared_len:
+                pins = [pool.pin_prefix(p, shared_len) for p in prompts]
+        for slot, rid, budget in zip(slots, rids, budgets):
             if not pool.admitting[slot]:  # the scheduler may have reserved already
-                pool.reserve(slot, rid=rid)
+                pool.reserve(slot, rid=rid, s0=s0, budget=budget,
+                             shared_len=shared_len)
+        group_len = pool.virtual_len if paged else self.capacity
         cache = init_params(
-            cache_defs(self.cfg, batch=k, max_len=self.capacity),
+            cache_defs(self.cfg, batch=k, max_len=group_len),
             jax.random.PRNGKey(0),
         )
         if self.cfg.family == "audio":
             ck, cv = self._cross_cache(self.params, self._frontend_stub(k))
             cache = dict(cache, cross_k=ck.astype(cache["cross_k"].dtype),
                          cross_v=cv.astype(cache["cross_v"].dtype))
+        if pins is not None:
+            # land the resident prefix pages in the group rows; chunking
+            # starts at shared_len (pos below) and computes only the delta
+            cache = pool.fill_group_prefix(cache, pins)
         return ChunkedPrefillState(prompts=prompts, rids=list(rids),
                                    budgets=list(budgets), slots=list(slots),
                                    cache=cache,
-                                   frontend=self._chunk_frontend(k))
+                                   frontend=self._chunk_frontend(k, group_len),
+                                   pos=shared_len, shared_len=shared_len,
+                                   pins=pins)
 
-    def _chunk_frontend(self, batch: int):
+    def _chunk_frontend(self, batch: int, seq_len: int | None = None):
         """VLM frontend stub padded to cache capacity on the seq axis, so
         every chunk can slice it at its offset (built once per group)."""
         if self.cfg.family != "vlm":
             return None
-        return jnp.zeros((batch, self.capacity, self.cfg.d_model), self.cfg.dtype)
+        return jnp.zeros((batch, seq_len or self.capacity, self.cfg.d_model),
+                         self.cfg.dtype)
 
     def chunk_step_probe(self, batch: int, chunk_tokens: int):
         """Zero-arg callable running ONE representative chunked-prefill step
@@ -417,11 +604,32 @@ class InferenceEngine:
         """Land each prefilled row into its reserved slot (admitting →
         decoding) and return the group's first emitted tokens."""
         assert st.done and st.first is not None
+        if isinstance(pool, PagedSlotPool):
+            for j, slot in enumerate(st.slots):
+                pool.activate_from_group(
+                    slot, st.cache, j, rid=st.rids[j], pos=st.s0,
+                    budget=st.budgets[j], first_tok=int(st.first[j]),
+                    prompt=st.prompts[j],
+                    pins=st.pins[j] if st.pins else ())
+            st.pins = None  # refs transferred into the slots' tables
+            return st.first
         for j, slot in enumerate(st.slots):
             row = jax.tree.map(lambda t: t[:, j : j + 1], st.cache)
             pool.activate(slot, row, rid=st.rids[j], pos=st.s0,
                           budget=st.budgets[j], first_tok=int(st.first[j]))
         return st.first
+
+    def cancel_chunked_prefill(self, pool: SlotPool,
+                               st: "ChunkedPrefillState") -> None:
+        """Abort an in-flight admitting group (the scheduler's degrade path
+        after repeated chunk faults): release the group's pinned prefix
+        pages and retire its reserved slots so nothing leaks."""
+        if st.pins:
+            for pins in st.pins:
+                pool.unpin_prefix(pins)
+            st.pins = None
+        for slot in st.slots:
+            pool.retire(slot)
 
 
 @dataclasses.dataclass
@@ -436,6 +644,8 @@ class ChunkedPrefillState:
     frontend: Any = None          # capacity-padded VLM frontend stub (or None)
     pos: int = 0                  # prompt tokens prefilled so far
     first: np.ndarray | None = None  # first emitted token per request (when done)
+    shared_len: int = 0           # resident shared-prefix tokens (paged + COW)
+    pins: list | None = None      # pinned prefix page ids per row (until activate)
 
     @property
     def s0(self) -> int:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
@@ -77,9 +78,57 @@ def cache_defs(cfg: ArchConfig, *, batch: int, max_len: int) -> dict:
     raise ValueError(f)
 
 
-def cache_bytes(cfg: ArchConfig, *, batch: int, max_len: int) -> int:
-    defs = cache_defs(cfg, batch=batch, max_len=max_len)
-    import jax
+def paged_keys(cfg: ArchConfig) -> tuple[str, ...]:
+    """Cache keys whose SEQUENCE axis (axis 2) is paged by ``serving/pages``.
 
+    Everything per-slot and O(1)-in-sequence stays unpaged: SSM conv/state
+    (recurrent, not positional) and audio cross K/V (fixed at encoder_seq).
+    """
+    f = cfg.family
+    if f in ("dense", "vlm", "audio") or (f == "moe" and cfg.mla is None):
+        return ("k", "v")
+    if f == "moe":
+        return ("c", "krope")
+    if f == "hybrid":
+        return ("shared_k", "shared_v")
+    if f == "ssm":
+        return ()
+    raise ValueError(f)
+
+
+def page_defs(cfg: ArchConfig, *, num_pages: int, page_size: int) -> dict:
+    """Paged layout for the sequence-dim cache leaves: ``(lead, num_pages,
+    page_size, ...)`` — one shared physical-page axis in place of the
+    per-slot (batch, seq) rectangle. Page index 0 is reserved as a scratch
+    page by the pool (unmapped table entries point at it)."""
+    defs = cache_defs(cfg, batch=num_pages, max_len=page_size)
+    out = {}
+    for key in paged_keys(cfg):
+        d = defs[key]
+        # the page axis is deliberately unsharded (pages migrate between
+        # requests); the in-page seq axis keeps the flash-decoding mapping
+        out[key] = ParamDef(d.shape, (d.logical[0], None) + d.logical[2:],
+                            init="zeros", dtype=d.dtype)
+    return out
+
+
+def _defs_bytes(defs: dict) -> int:
     leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
     return sum(math.prod(d.shape) * jnp.dtype(d.dtype).itemsize for d in leaves)
+
+
+def cache_bytes(cfg: ArchConfig, *, batch: int, max_len: int) -> int:
+    """HBM bytes of the contiguous layout: every slot owns max_len rows."""
+    return _defs_bytes(cache_defs(cfg, batch=batch, max_len=max_len))
+
+
+def paged_cache_bytes(cfg: ArchConfig, *, batch: int, num_pages: int,
+                      page_size: int, max_blocks: int) -> int:
+    """HBM bytes of the paged layout: the shared page arrays, plus the
+    per-slot UNPAGED leaves (SSM conv/state, audio cross K/V — none of which
+    depend on max_len), plus the dense int32 page table."""
+    unpaged = {k: d for k, d in cache_defs(cfg, batch=batch, max_len=1).items()
+               if k not in paged_keys(cfg)}
+    return (_defs_bytes(page_defs(cfg, num_pages=num_pages, page_size=page_size))
+            + _defs_bytes(unpaged)
+            + batch * max_blocks * jnp.dtype(jnp.int32).itemsize)

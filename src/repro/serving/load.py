@@ -13,6 +13,9 @@ Four processes, all vectorized:
                       one bounded window at a many-× spike rate (a launch, a
                       retweet, a retry storm) — the admission-control /
                       load-shedding stress regime
+  shared_prefix_stream  common-system-prompt traffic: one shared prefix +
+                      per-request random tails — the paged-KV copy-on-write
+                      prefix-sharing regime
 
 Per-request prompt lengths are drawn from a small bucket set — the engine's
 jitted prefill retraces per distinct prompt length, so a bounded set keeps
@@ -156,6 +159,37 @@ def flash_crowd_stream(n: int, *, base_rate_hz: float, spike_rate_hz: float,
                         vocab_size=vocab_size, prompt_lens=prompt_lens,
                         new_tokens=new_tokens, deadline_s=deadline_s,
                         prompt_period=prompt_period)
+
+
+def shared_prefix_stream(n: int, *, rate_hz: float, prefix_len: int,
+                         tail_len: int, warm_s: float = 0.0, seed: int = 0,
+                         vocab_size: int = 256,
+                         new_tokens: tuple[int, int] = (4, 16),
+                         deadline_s: float | None = None) -> list[Request]:
+    """Common-system-prompt traffic: every request's prompt is one shared
+    ``prefix_len``-token prefix (drawn once per stream) followed by a
+    per-request random ``tail_len``-token tail — the application-specific
+    regime paged COW prefix sharing exists for. Request 0 arrives alone at
+    t=0 (its admission warms the prefix registry); the rest arrive Poisson
+    at ``rate_hz`` starting from ``warm_s``. All prompts share one length,
+    so chunked admission forms maximal groups."""
+    assert n >= 1 and prefix_len >= 1 and tail_len >= 1
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab_size, prefix_len).astype(np.int32)
+    arrivals = np.concatenate(
+        [[0.0], warm_s + np.cumsum(rng.exponential(1.0 / rate_hz, n - 1))])
+    budgets = rng.integers(new_tokens[0], new_tokens[1] + 1, size=n)
+    return [
+        Request(
+            rid=i,
+            arrival_s=float(arrivals[i]),
+            prompt=np.concatenate(
+                [prefix, rng.integers(0, vocab_size, tail_len).astype(np.int32)]),
+            new_tokens=int(budgets[i]),
+            deadline_s=deadline_s,
+        )
+        for i in range(n)
+    ]
 
 
 def mean_service_s(cal, *, prompt_len: int = 8, mean_tokens: int = 12) -> float:

@@ -99,6 +99,7 @@ from repro.serving.draft import NgramDrafter, SpecThrottle
 from repro.serving.engine import ChunkedPrefillState, InferenceEngine, tpu_reload_costs
 from repro.serving.faults import FaultInjector, FaultProfile
 from repro.serving.load import Request
+from repro.serving.pages import PagedSlotPool
 from repro.serving.policy import DutyCyclePolicy, make_policy
 from repro.serving.slots import SlotPool
 
@@ -244,6 +245,9 @@ class ServeReport:
     degraded: int = 0          # chunked→blocking admission fallbacks
     throttled_ticks: int = 0   # speculative ticks demoted to plain decode
     wasted_energy_j: float = 0.0  # energy that produced no on-time tokens
+    peak_active: int = 0       # max concurrently occupied slots (capacity)
+    shared_hit_pages: int = 0  # prefix-registry pages mapped read-only (paged)
+    cow_copies: int = 0        # copy-on-write page copies performed (paged)
 
     @property
     def items(self) -> int:
@@ -397,7 +401,10 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if speculate_k is not None and speculate_k < 1:
             raise ValueError(f"speculate_k must be >= 1, got {speculate_k}")
-        if speculate_k and execute and engine.sc.spec_slack < speculate_k:
+        if (speculate_k and execute and not engine.sc.paged
+                and engine.sc.spec_slack < speculate_k):
+            # paged pools need no spare rows: verify-window tail blocks are
+            # allocated on demand (the engine checks the table bound instead)
             raise ValueError(
                 f"speculate_k={speculate_k} needs an engine with "
                 f"ServeConfig.spec_slack >= {speculate_k} spare cache rows "
@@ -473,6 +480,15 @@ class ContinuousBatchingScheduler:
                + remaining * self.cal.step_s())
         return est > arrival_s + deadline_s
 
+    def _prefix_len(self, r: Request) -> int:
+        """Registered shared-prefix length of a request (tokens) — the extra
+        chunked-admission grouping key under paged prefix sharing, so every
+        group member skips the SAME resident prefix. 0 whenever sharing is
+        off (contiguous pools, virtual pools, share_prefix=False)."""
+        if not self.execute or not getattr(self.pool, "share_prefix", False):
+            return 0
+        return self.pool.match_prefix_len(r.prompt)
+
     def run(self, requests: Sequence[Request]) -> ServeReport:
         mode = ("speculative" if self.speculate_k
                 else "chunked" if self.prefill_chunk else "continuous")
@@ -486,6 +502,16 @@ class ContinuousBatchingScheduler:
                 raise ValueError(
                     f"request {r.rid}: prompt {len(r.prompt)} + budget "
                     f"{r.new_tokens} exceeds max_len {self.pool.max_len}")
+            if isinstance(self.pool, PagedSlotPool):
+                # an EMPTY paged pool must always be able to admit: with the
+                # worst case bounded by the pool size, blocked admissions
+                # only ever wait for pages, never deadlock on them
+                need = -(-(len(r.prompt) + r.new_tokens - 1) // self.pool.page)
+                if need > self.pool.num_pages - 1:
+                    raise ValueError(
+                        f"request {r.rid}: worst case {need} pages exceeds "
+                        f"the pool's {self.pool.num_pages - 1} allocatable "
+                        f"pages (num_pages - scratch)")
         recs = {r.rid: RequestRecord(r.rid, r.arrival_s, len(r.prompt), r.new_tokens)
                 for r in reqs}
         deadlines = {r.rid: r.deadline_s for r in reqs}
@@ -510,6 +536,7 @@ class ContinuousBatchingScheduler:
         chunk_disabled = False
         shed = retried = quarantined = failed = 0
         chunk_faults = stragglers = degraded = throttled = 0
+        peak_active = 0
         guard = 0
         cn = self.prefill_chunk or 1
         guard_max = 16 * (n + sum(r.new_tokens for r in reqs)
@@ -625,9 +652,14 @@ class ContinuousBatchingScheduler:
             shed_scan()
 
             # quarantined requests re-admit FIRST — they hold committed work
+            # (re-admission needs the context's worst-case page budget too:
+            # s0 = prompt + already-emitted tokens, budget = the remainder)
             while pool.free_count and retry_q:
-                idx = next((j for j, e in enumerate(retry_q)
-                            if e["ready_at"] <= t), None)
+                idx = next(
+                    (j for j, e in enumerate(retry_q)
+                     if e["ready_at"] <= t and pool.can_admit(
+                         len(by_rid[e["rid"]].prompt) + e["emitted"] - 1,
+                         e["budget"] - e["emitted"] + 1)), None)
                 if idx is None:
                     break
                 admit_retry(retry_q.pop(idx))
@@ -635,8 +667,12 @@ class ContinuousBatchingScheduler:
 
             if self.prefill_chunk is None or chunk_disabled:
                 # BLOCKING admissions: fill free slots from the ready queue;
-                # each prefill stalls the whole pool
-                while ready and pool.free_count:
+                # each prefill stalls the whole pool. can_admit covers the
+                # free-slot check and (paged) the head's worst-case page
+                # budget — admission stays FIFO, so a page-starved head
+                # waits rather than being jumped
+                while ready and pool.can_admit(len(ready[0].prompt),
+                                               ready[0].new_tokens):
                     r = ready.popleft()
                     rec = recs[r.rid]
                     # t advanced during earlier admissions — re-check
@@ -667,30 +703,42 @@ class ContinuousBatchingScheduler:
                     self._maybe_finish(slot, rec, t, deadlines[r.rid])
                     ingest()
             elif group is None and ready and pool.free_count:
-                # CHUNKED admission: reserve slots for the maximal FIFO run of
-                # waiting same-prompt-length requests (one batched prefill)
-                g = [ready.popleft()]
-                while (ready and len(g) < pool.free_count
-                       and len(ready[0].prompt) == len(g[0].prompt)):
-                    g.append(ready.popleft())
-                slots = []
-                for r in g:
+                # CHUNKED admission: reserve slots for the maximal FIFO run
+                # of waiting same-prompt-length (and, under paged prefix
+                # sharing, same shared-prefix-length) requests — one batched
+                # prefill. Each member reserves AS it joins, so the paged
+                # pool's page-budget accounting sees the cumulative claim
+                # and can_admit stops the run before pages oversubscribe.
+                m0 = self._prefix_len(ready[0])
+                g: list[Request] = []
+                slots: list[int] = []
+                while (ready and pool.free_count
+                       and (not g
+                            or (len(ready[0].prompt) == len(g[0].prompt)
+                                and self._prefix_len(ready[0]) == m0))
+                       and pool.can_admit(len(ready[0].prompt),
+                                          ready[0].new_tokens,
+                                          shared_len=m0)):
+                    r = ready.popleft()
                     slot = pool.next_free()
-                    pool.reserve(slot, rid=r.rid)
+                    pool.reserve(slot, rid=r.rid, s0=len(r.prompt),
+                                 budget=r.new_tokens, shared_len=m0)
+                    g.append(r)
                     slots.append(slot)
                     recs[r.rid].admit_s = t
                     self.admitted += 1
-                prompts = np.stack([r.prompt for r in g]).astype(np.int32)
-                rids = [r.rid for r in g]
-                budgets = [r.new_tokens for r in g]
-                group_fails = 0
-                group_spent_ok = 0.0
-                if self.execute:
-                    group = self.engine.begin_chunked_prefill(
-                        pool, slots, prompts, rids=rids, budgets=budgets)
-                else:
-                    group = ChunkedPrefillState(prompts=prompts, rids=rids,
-                                                budgets=budgets, slots=slots)
+                if g:
+                    prompts = np.stack([r.prompt for r in g]).astype(np.int32)
+                    rids = [r.rid for r in g]
+                    budgets = [r.new_tokens for r in g]
+                    group_fails = 0
+                    group_spent_ok = 0.0
+                    if self.execute:
+                        group = self.engine.begin_chunked_prefill(
+                            pool, slots, prompts, rids=rids, budgets=budgets)
+                    else:
+                        group = ChunkedPrefillState(prompts=prompts, rids=rids,
+                                                    budgets=budgets, slots=slots)
 
             if group is not None:
                 # PREFILL: advance the admitting group by one chunk; the
@@ -722,8 +770,12 @@ class ContinuousBatchingScheduler:
                         chunk_disabled = True
                         for rid in group.rids:
                             recs[rid].waste_j += group_spent_ok / k
-                        for slot in group.slots:
-                            pool.retire(slot)
+                        if self.execute:
+                            # also releases any pinned shared-prefix pages
+                            self.engine.cancel_chunked_prefill(pool, group)
+                        else:
+                            for slot in group.slots:
+                                pool.retire(slot)
                         self.admitted -= k  # they re-admit through blocking
                         for r in reversed([by_rid[rid] for rid in group.rids]):
                             ready.appendleft(r)
@@ -756,6 +808,10 @@ class ContinuousBatchingScheduler:
                             self._maybe_finish(group.slots[j], rec, t,
                                                deadlines[rid])
                         group = None
+
+            # sample occupancy at its per-tick high-water mark (admissions
+            # done, nothing retired yet this tick)
+            peak_active = max(peak_active, pool.active_count)
 
             decoding = pool.decoding_slots()
             spec_k = 0
@@ -889,6 +945,8 @@ class ContinuousBatchingScheduler:
                 reloads += int(out.slept)
                 t = target + out.wake_s
 
+            peak_active = max(peak_active, pool.active_count)
+
             # conservation: every request is in exactly one place
             assert (self.completed + shed + failed + pool.active_count
                     + len(retry_q) + len(ready) + (n - i) == n), \
@@ -912,7 +970,10 @@ class ContinuousBatchingScheduler:
                            shed=shed, retried=retried, quarantined=quarantined,
                            failed=failed, chunk_faults=chunk_faults,
                            stragglers=stragglers, degraded=degraded,
-                           throttled_ticks=throttled, wasted_energy_j=wasted)
+                           throttled_ticks=throttled, wasted_energy_j=wasted,
+                           peak_active=peak_active,
+                           shared_hit_pages=getattr(pool, "shared_hit_pages", 0),
+                           cow_copies=getattr(pool, "cow_copies", 0))
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,17 @@ instead of lockstep fixed batches:
   * an explicit free-slot deque makes the scheduler's admission scan O(1)
     per tick (and gives FIFO slot reuse) instead of scanning all
     ``max_batch`` slots.
+
+This pool is the CONTIGUOUS layout: every slot owns a full
+``max_len + slack`` rectangle of cache rows, so a 12-token request costs
+the same HBM as one at the admission bound. ``serving/pages.PagedSlotPool``
+is the drop-in paged alternative — each slot's logical blocks of
+``page_size`` sequence rows map through a dense int32 page table onto a
+shared physical page array, with refcounted copy-on-write sharing of
+block-aligned prompt prefixes (see that module's docstring for the
+logical-block ↔ physical-page mapping and the COW rules). The scheduler
+talks to both through the same surface; the capacity probes it needs
+(``can_admit``) are trivially true here and memory-aware there.
 """
 from __future__ import annotations
 
@@ -163,19 +174,31 @@ class SlotPool:
         return np.asarray([s.pos for s in self.slots], np.int32)
 
     # -- lifecycle ----------------------------------------------------------
+    def can_admit(self, s0: int, budget: int, *, shared_len: int = 0) -> bool:
+        """Admission capacity probe: contiguous pools only need a free slot
+        (every slot owns its full cache rectangle). The paged pool overrides
+        this with page-budget accounting; the scheduler calls it before every
+        admission so both layouts share one admission loop."""
+        return self.free_count > 0
+
     def _claim(self, slot: int) -> None:
         assert not self.active[slot], f"slot {slot} already active"
-        self._free.remove(slot)  # O(free) — only paid at admission, not per tick
+        if self._free and self._free[0] == slot:
+            self._free.popleft()  # O(1): callers claim the peeked FIFO head
+        else:
+            self._free.remove(slot)  # O(free) fallback for out-of-order claims
         self.active[slot] = True
 
     def admit(self, slot: int, req_cache: dict, *, rid: int, pos: int,
-              budget: int, first_tok: int, emitted: int = 1) -> None:
+              budget: int, first_tok: int, emitted: int = 1,
+              prompt=None) -> None:
         """Place a prefilled request (cache already grown to max_len) into a
         free slot. ``pos`` is the prefilled context length; ``first_tok`` the
         slot's next decode input (the argmax of the prefill logits for a
         fresh admission, or the last committed token for a quarantine-retry
         re-admission, where ``emitted`` carries the tokens already emitted
-        before the fault)."""
+        before the fault). ``prompt`` is ignored here; the paged pool uses
+        it to register the request's block-aligned prefix for sharing."""
         assert self.cache is not None, "cannot admit a real cache into a virtual pool"
         assert pos + (budget - emitted) + 1 <= self.max_len, (pos, budget, emitted,
                                                               self.max_len)
@@ -195,11 +218,14 @@ class SlotPool:
         self._claim(slot)
         self.slots[slot] = SlotInfo(rid=rid, pos=pos, budget=budget, emitted=emitted)
 
-    def reserve(self, slot: int, *, rid: int) -> None:
+    def reserve(self, slot: int, *, rid: int, s0: int = 0, budget: int = 0,
+                shared_len: int = 0) -> None:
         """Claim a free slot for a request whose chunked prefill is about to
         start. The slot is ``admitting``: occupied (no other admission may
         take it) but excluded from the masked decode step until
-        ``activate`` lands the prefilled cache."""
+        ``activate`` lands the prefilled cache. ``s0``/``budget``/
+        ``shared_len`` are ignored here; the paged pool uses them to reserve
+        the request's worst-case page count at claim time."""
         self._claim(slot)
         self.admitting[slot] = True
         self.slots[slot] = SlotInfo(rid=rid)

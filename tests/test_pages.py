@@ -1,0 +1,333 @@
+"""Property-style tests of the paged KV-cache allocator (serving/pages.py):
+refcount conservation, no leak / no double-free, copy-on-write never writes
+a shared page in place, prefix-registry LRU eviction, NaN-taint scrubbing,
+and byte accounting. Runs under hypothesis when available; otherwise the
+same properties are driven by seeded random interleavings."""
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.serving.kv_cache import cache_defs, paged_cache_bytes, paged_keys
+from repro.serving.pages import SCRATCH, PagePool, PagedSlotPool
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _cfg(arch="granite-3-8b"):
+    return dataclasses.replace(get_reduced_config(arch), dtype=jnp.float32)
+
+
+def _req_cache(cfg, pos, seed=0):
+    """A fake batch-1 prefill result: random normal rows so byte-level
+    sharing/COW checks can distinguish pages."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for k, d in cache_defs(cfg, batch=1, max_len=pos).items():
+        key, sub = jax.random.split(key)
+        out[k] = jax.random.normal(sub, d.shape, jnp.float32)
+    return out
+
+
+def _page(pool, pid, key=None):
+    key = key if key is not None else pool._pkeys[0]
+    return np.asarray(pool.cache[key])[:, int(pid)]
+
+
+# ---------------------------------------------------------------------------
+# PagePool: the bare allocator
+# ---------------------------------------------------------------------------
+def test_pagepool_alloc_free_cycle():
+    pool = PagePool(5)
+    assert pool.free_count == 4  # scratch is never allocatable
+    pids = [pool.alloc() for _ in range(4)]
+    assert sorted(pids) == [1, 2, 3, 4] and pool.alloc() is None
+    assert pool.decref(pids[0]) and pool.free_count == 1
+    assert pool.alloc() == pids[0]  # FIFO reuse of the freed page
+    pool.incref(pids[1])
+    assert not pool.decref(pids[1])  # still referenced
+    assert pool.decref(pids[1])
+
+
+def test_pagepool_rejects_misuse():
+    pool = PagePool(3)
+    with pytest.raises(AssertionError):
+        pool.decref(SCRATCH)  # scratch is pinned forever
+    with pytest.raises(AssertionError):
+        pool.incref(1)  # not allocated
+    pid = pool.alloc()
+    pool.decref(pid)
+    with pytest.raises(AssertionError):
+        pool.decref(pid)  # double free
+
+
+def _pagepool_interleaving(ops, num_pages):
+    """Any interleaving of alloc/incref/decref conserves refcounts: a page
+    is on the free list iff its refcount is 0, decref frees exactly at 0,
+    and alloc only fails when genuinely out of pages."""
+    pool = PagePool(num_pages)
+    refs = collections.Counter()
+    for op, which in ops:
+        if op == "alloc":
+            pid = pool.alloc()
+            if pid is None:
+                assert pool.free_count == 0
+            else:
+                assert refs[pid] == 0
+                refs[pid] += 1
+        elif not refs:
+            continue
+        else:
+            pid = sorted(refs)[which % len(refs)]
+            if op == "incref":
+                pool.incref(pid)
+                refs[pid] += 1
+            else:
+                freed = pool.decref(pid)
+                refs[pid] -= 1
+                assert freed == (refs[pid] == 0)
+                if not refs[pid]:
+                    del refs[pid]
+    for pid in range(1, num_pages):
+        assert pool.refcount[pid] == refs.get(pid, 0)
+    assert pool.free_count == (num_pages - 1) - len(refs)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "incref", "decref"]),
+                              st.integers(0, 63)), max_size=120),
+           st.integers(2, 9))
+    def test_pagepool_interleavings(ops, num_pages):
+        _pagepool_interleaving(ops, num_pages)
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_pagepool_interleavings(seed):
+        rng = np.random.default_rng(seed)
+        ops = [(rng.choice(["alloc", "incref", "decref"]), int(rng.integers(64)))
+               for _ in range(120)]
+        _pagepool_interleaving(ops, int(rng.integers(2, 9)))
+
+
+# ---------------------------------------------------------------------------
+# PagedSlotPool: lifecycle invariants
+# ---------------------------------------------------------------------------
+def test_admit_retire_leaves_no_refs():
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4)
+    pool.admit(0, _req_cache(cfg, 5), rid=0, pos=5, budget=4, first_tok=1)
+    assert (pool.table[0, :2] != SCRATCH).all()
+    assert (pool.table[0, 2:] == SCRATCH).all()
+    pool.check_invariants()
+    pool.retire(0)
+    pool.check_invariants()
+    assert pool.pages.free_count == pool.num_pages - 1
+    assert (pool.table == SCRATCH).all()
+
+
+def test_admit_scatters_rows_page_aligned():
+    """The physical rows addressed through the table reproduce the request
+    cache exactly — mapping, not copying semantics, decides placement."""
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4)
+    req = _req_cache(cfg, 6)
+    pool.admit(0, req, rid=0, pos=6, budget=2, first_tok=1)
+    for key in paged_keys(cfg):
+        want = np.asarray(req[key])[:, 0]  # (lead, 6, *tail)
+        got = np.concatenate([_page(pool, pool.table[0, b], key)
+                              for b in range(2)], axis=1)[:, :6]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_cow_fork_never_writes_shared_page():
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=3, max_len=16, page_size=4)
+    pool.admit(0, _req_cache(cfg, 5), rid=0, pos=5, budget=4, first_tok=1)
+    pool.fork_slot(0, 1, rid=1)
+    pool.check_invariants()
+    assert (pool.table[1, :2] == pool.table[0, :2]).all()
+    src_pid = int(pool.table[0, 1])
+    assert pool.pages.refcount[src_pid] == 2
+    before = _page(pool, src_pid)
+
+    pool.ensure_writable(1, 5, 6)  # write span inside block 1 only
+    pool.check_invariants()
+    assert pool.cow_copies == 1
+    new_pid = int(pool.table[1, 1])
+    assert new_pid != src_pid and pool.table[1, 0] == pool.table[0, 0]
+    assert pool.pages.refcount[src_pid] == 1
+    # the copy starts byte-identical; the shared original was never touched
+    np.testing.assert_array_equal(_page(pool, new_pid), before)
+    np.testing.assert_array_equal(_page(pool, src_pid), before)
+    # the writer now owns it exclusively — a second call is a no-op
+    pool.ensure_writable(1, 5, 6)
+    assert pool.cow_copies == 1
+    pool.retire(0)
+    pool.retire(1)
+    pool.check_invariants()
+    assert pool.pages.free_count == pool.num_pages - 1
+
+
+def test_prefix_registry_share_and_survival():
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         share_prefix=True)
+    prompt = np.arange(9, dtype=np.int32)
+    pool.admit(0, _req_cache(cfg, 9), rid=0, pos=9, budget=2, first_tok=1,
+               prompt=prompt)
+    pool.check_invariants()
+    # 2 FULL blocks registered; the match is capped at s0-1 so the consumer
+    # always prefills at least the last prompt position itself
+    assert pool.match_prefix_len(prompt) == 8
+    assert pool.match_prefix_len(np.arange(8, dtype=np.int32)) == 4
+    assert pool.match_prefix_len(prompt[::-1].copy()) == 0
+    shared = [int(pool.table[0, b]) for b in range(2)]
+
+    pins = pool.pin_prefix(prompt, 8)
+    assert pins == shared and pool.shared_hit_pages == 2
+    pool._extra_pins = pins
+    pool.check_invariants()
+    assert all(pool.pages.refcount[p] == 3 for p in pins)  # table+registry+pin
+    pool.unpin_prefix(pins)
+    del pool._extra_pins
+
+    pool.retire(0)  # registry keeps the pages resident past the owner
+    pool.check_invariants()
+    assert pool.match_prefix_len(prompt) == 8
+    assert all(pool.pages.refcount[p] == 1 for p in shared)
+
+
+def test_registry_lru_eviction_under_pressure():
+    cfg = _cfg()
+    # 7 allocatable pages; the retired prompt leaves 2 registry-only pages
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         num_pages=8, share_prefix=True)
+    prompt = np.arange(8, dtype=np.int32)
+    pool.admit(0, _req_cache(cfg, 8), rid=0, pos=8, budget=2, first_tok=1,
+               prompt=prompt)
+    pool.retire(0)
+    assert pool.match_prefix_len(np.arange(9, dtype=np.int32)) == 8
+    assert pool._evictable() == 2 and pool.pages.free_count == 5
+
+    pool.admit(0, _req_cache(cfg, 15), rid=1, pos=15, budget=1, first_tok=1)
+    assert pool.can_admit(8, 1)  # 2 blocks <= 1 free + 2 evictable
+    pool.admit(1, _req_cache(cfg, 8), rid=2, pos=8, budget=1, first_tok=1)
+    assert pool.evictions == 1  # LRU registry page recycled for the demand
+    pool.check_invariants()
+    assert pool.match_prefix_len(np.arange(9, dtype=np.int32)) < 8
+
+
+def test_can_admit_counts_outstanding_reservations():
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=4, max_len=16, page_size=4,
+                         num_pages=6)  # 5 allocatable
+    assert pool.can_admit(8, 8)  # 4 blocks <= 5
+    pool.reserve(0, rid=0, s0=8, budget=8)  # group member, prefill in flight
+    assert not pool.can_admit(8, 8)  # its 4 reserved pages are spoken for
+    assert pool.can_admit(4, 1)
+    # a shared prefix shrinks the demand: those pages come from the registry
+    assert pool.can_admit(8, 8, shared_len=4 * 3)
+    pool.retire(0)
+    assert pool.can_admit(8, 8)
+    pool.check_invariants()
+
+
+def test_poison_taints_and_scrubs_on_reuse():
+    cfg = _cfg()
+    # 7 allocatable pages, so the re-admissions below drain the WHOLE free
+    # list and every tainted page really gets reallocated (and scrubbed)
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         num_pages=8, share_prefix=True)
+    prompt = np.arange(8, dtype=np.int32)
+    pool.admit(0, _req_cache(cfg, 8), rid=0, pos=8, budget=2, first_tok=1,
+               prompt=prompt)
+    registered = [int(pool.table[0, b]) for b in range(2)]
+    pool.poison(0)
+    pool.check_invariants()
+    # registry pages were force-exclusived first: the NaNs landed in fresh
+    # copies, the registered bytes stay clean for future sharers
+    assert pool.cow_copies == 2
+    for pid in registered:
+        assert np.isfinite(_page(pool, pid)).all()
+    for b in range(2):
+        assert np.isnan(_page(pool, pool.table[0, b])).all()
+
+    pool.retire(0)
+    assert pool._tainted and not pool._slot_tainted
+    # reallocation scrubs lazily: drain every page, then nothing is NaN
+    pool.admit(0, _req_cache(cfg, 15), rid=1, pos=15, budget=1, first_tok=1)
+    pool.admit(1, _req_cache(cfg, 12), rid=2, pos=12, budget=1, first_tok=1)
+    assert not pool._tainted
+    for key in paged_keys(cfg):
+        assert np.isfinite(np.asarray(pool.cache[key])).all()
+    pool.check_invariants()
+
+
+def _random_lifecycle(seed):
+    """Random interleavings of admit/fork/write/poison/retire hold the
+    refcount-conservation invariant after EVERY operation."""
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=3, max_len=16, page_size=4,
+                         share_prefix=True)
+    rng = np.random.default_rng(seed)
+    for _ in range(30):
+        free = [s for s in range(3) if not pool.active[s]]
+        live = [s for s in range(3) if pool.active[s]]
+        op = rng.choice(["admit", "fork", "write", "poison", "retire"])
+        if op == "admit" and free:
+            pos = int(rng.integers(2, 13))
+            prompt = rng.integers(0, 64, pos).astype(np.int32)
+            if pool.can_admit(pos, 3):
+                pool.admit(free[0], _req_cache(cfg, pos, seed=int(rng.integers(99))),
+                           rid=int(rng.integers(1 << 20)), pos=pos, budget=3,
+                           first_tok=1, prompt=prompt)
+        elif op == "fork" and free and live:
+            pool.fork_slot(live[0], free[0], rid=int(rng.integers(1 << 20)))
+        elif op == "write" and live:
+            s = live[int(rng.integers(len(live)))]
+            p = pool.slots[s].pos
+            pool.ensure_writable(s, p, p + 1)
+        elif op == "poison" and live:
+            pool.poison(live[int(rng.integers(len(live)))])
+        elif op == "retire" and live:
+            pool.retire(live[int(rng.integers(len(live)))])
+        pool.check_invariants()
+    for s in range(3):
+        if pool.active[s]:
+            pool.retire(s)
+    pool.check_invariants()
+    # no leak: every non-registry page is back on the free list
+    assert pool.pages.free_count == pool.num_pages - 1 - len(pool._prefix)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10_000))
+    def test_random_lifecycle_interleavings(seed):
+        _random_lifecycle(seed)
+else:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_lifecycle_interleavings(seed):
+        _random_lifecycle(seed)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ("granite-3-8b", "whisper-tiny", "mamba2-780m"))
+def test_paged_cache_bytes_matches_allocation(arch):
+    """kv_cache.paged_cache_bytes must account for EXACTLY what the pool
+    allocates: pages + unpaged per-slot leaves + the dense table."""
+    cfg = _cfg(arch)
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4)
+    actual = sum(np.asarray(v).nbytes for v in pool.cache.values())
+    actual += pool.table.nbytes
+    assert actual == paged_cache_bytes(cfg, batch=2, num_pages=pool.num_pages,
+                                       page_size=4,
+                                       max_blocks=pool.max_blocks)
