@@ -37,6 +37,14 @@ claims as floors:
                                 stream, paged copy-on-write prefix reuse
                                 vs full per-request prefill       >= 1.0
 
+  serve_memory_pressure (DETERMINISTIC — same fixed cost model, seeded
+  page-pressure faults on an over-committed paged pool):
+    memory_pressure_goodput_per_j_gain  on-time completions/J with tiered
+                                preempt-and-restore vs emergency-only
+                                relief                            >= 1.0
+    latency_tier_p99_gain       latency-tier p99 with tier-aware
+                                preemption vs tierless            >= 1.0
+
   paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
   so the floor is a catastrophic-regression guard, not the real margin; the
   committed full-run artifacts hold the true speedups):
@@ -76,6 +84,10 @@ PAGED_CHECKS = (
 SHARED_CHECKS = (
     ("shared_prefix_items_per_j_gain", 1.0),
 )
+MEMORY_PRESSURE_CHECKS = (
+    ("memory_pressure_goodput_per_j_gain", 1.0),
+    ("latency_tier_p99_gain", 1.0),
+)
 LSTM_CHECKS = (
     ("tpu_seq_speedup", 1.0),
     ("tpu_q8_speedup", 1.0),
@@ -86,6 +98,7 @@ CHECKS = {
     "serve_overload_robustness": ("tol", OVERLOAD_CHECKS),
     "serve_paged_capacity": ("tol", PAGED_CHECKS),
     "serve_shared_prefix": ("tol", SHARED_CHECKS),
+    "serve_memory_pressure": ("tol", MEMORY_PRESSURE_CHECKS),
     "paper_lstm_C1_C2": ("tol_lstm", LSTM_CHECKS),
 }
 

@@ -31,8 +31,26 @@ Memory (any scheduler mode):
                     prompt matches a registered block-aligned prefix map
                     the resident pages read-only and prefill only the delta
                     (paged only; disabled for SSM/hybrid/frontend families)
+  --page-budget     override the physical page count (default: contiguous
+                    parity); smaller budgets over-commit the pool and
+                    exercise the watermark/preemption path
   In compare mode a fifth row serves the stream on a paged pool and the
-  table reports the HBM bytes of both cache layouts.
+  table reports the HBM bytes of both cache layouts plus the preemption
+  column (preempted/swapped/recomputed).
+
+Memory pressure (paged only):
+  --preempt-policy  preempt-and-restore instead of crashing on page
+                    exhaustion: victims picked by SLO tier + deadline slack
+                    ("tiered"), page footprint ("footprint"), or slack
+                    alone ("slack"); "none" (default) keeps the emergency
+                    shed-only behaviour
+  --swap/--no-swap  allow swap-out restore (pages copied to a host buffer
+                    and re-mapped bit-identically) when the cost model
+                    prefers it over re-prefill recompute
+  --tier-mix        fraction of requests on the "latency" SLO tier (drawn
+                    from a separate seeded generator; 0 = all batch tier);
+                    latency arrivals may preempt batch-tier slots instead
+                    of queueing
 
 Robustness (any scheduler mode):
   --fault-profile   inject deterministic faults: a named profile
@@ -99,7 +117,7 @@ def _make_stream(args, cfg, cal):
         period = 4 if args.mode in ("speculative", "compare") else 0
     kw = dict(seed=args.seed, vocab_size=cfg.vocab_size,
               prompt_lens=(4, 8), new_tokens=(4, 24),
-              prompt_period=period or None)
+              prompt_period=period or None, tier_mix=args.tier_mix)
     deadline = args.deadline if args.deadline > 0 else None
     if args.load == "poisson":
         return poisson_stream(args.n, rate_hz=0.5 / service,
@@ -167,6 +185,23 @@ def main(argv=None) -> int:
                     default=False,
                     help="copy-on-write shared-prefix reuse across requests "
                          "(with --paged; attention families only)")
+    ap.add_argument("--page-budget", type=int, default=0,
+                    help="physical page count for the paged pool (0 = size "
+                         "for contiguous parity); small budgets over-commit "
+                         "and exercise preemption (with --paged)")
+    ap.add_argument("--preempt-policy", default="none",
+                    choices=("none", "tiered", "footprint", "slack"),
+                    help="victim-selection policy for preempt-and-restore "
+                         "under page pressure (with --paged); none = "
+                         "emergency shed-only")
+    ap.add_argument("--swap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="allow swap-out restore for preempted slots when "
+                         "the cost model prefers it over recompute "
+                         "(with --preempt-policy)")
+    ap.add_argument("--tier-mix", type=float, default=0.0,
+                    help="fraction of requests on the interactive 'latency' "
+                         "SLO tier (0 = all batch tier)")
     ap.add_argument("--policy", default="adaptive",
                     choices=("on_off", "idle_waiting", "slow_down", "adaptive"))
     ap.add_argument("--trace", default="regular",
@@ -180,6 +215,10 @@ def main(argv=None) -> int:
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.preempt_policy != "none" and not args.paged:
+        ap.error("--preempt-policy requires --paged")
+    if args.page_budget and not args.paged:
+        ap.error("--page-budget requires --paged")
 
     cfg = get_reduced_config(args.arch)
     # paged pools need no spec_slack spare rows: verify-window tail blocks
@@ -192,6 +231,7 @@ def main(argv=None) -> int:
                                                  spec_slack=slack,
                                                  paged=args.paged,
                                                  page_size=args.page_size,
+                                                 num_pages=args.page_budget or None,
                                                  share_prefix=args.share_prefix))
 
     if args.mode == "strategies":
@@ -231,11 +271,15 @@ def main(argv=None) -> int:
                   queue_limit=args.queue_limit or None,
                   faults=faults if faults is not None and faults.enabled else None,
                   retry=retry)
+    # preempt/swap are paged-only scheduler knobs; keep them out of `robust`
+    # so compare mode's contiguous rows stay valid
+    preempt_kw = ({"preempt": args.preempt_policy, "swap": args.swap}
+                  if args.preempt_policy != "none" else {})
     sched = ContinuousBatchingScheduler(
         engine, policy=args.policy, chips=args.chips, calibration=cal,
         prefill_chunk=args.prefill_chunk if args.mode == "chunked" else None,
         speculate_k=args.speculate_k if args.mode == "speculative" else None,
-        **robust)
+        **robust, **preempt_kw)
     rep = sched.run(reqs)
     print("  " + rep.summary())
     tau = sched.policy.tau
@@ -263,7 +307,7 @@ def main(argv=None) -> int:
                 page_size=args.page_size, share_prefix=args.share_prefix))
             psched = ContinuousBatchingScheduler(
                 peng, policy=args.policy, chips=args.chips, calibration=cal,
-                **robust)
+                **robust, **preempt_kw)
             prep = psched.run(reqs)
             print("  " + prep.summary() + " [paged]")
         pool = psched.pool
@@ -278,6 +322,10 @@ def main(argv=None) -> int:
               f"({pool.num_pages} pages of {pool.page} rows); "
               f"shared page hits={prep.shared_hit_pages}, "
               f"COW copies={prep.cow_copies}")
+        print(f"  paged preemption: preempted={prep.preempted} "
+              f"(swap={prep.swapped}, recompute={prep.recomputed}), "
+              f"evictions={prep.evictions}, "
+              f"preempt waste={prep.preempt_wasted_j:.2f} J")
         print(f"  continuous/static items-per-J: "
               f"{rep.items_per_joule / stat.items_per_joule:.2f}x, "
               f"p50 speedup: {stat.p50_s / rep.p50_s:.2f}x, "

@@ -605,6 +605,13 @@ class InferenceEngine:
         decoding) and return the group's first emitted tokens."""
         assert st.done and st.first is not None
         if isinstance(pool, PagedSlotPool):
+            # atomic commit: check the group's TOTAL delta up front (typed
+            # PageExhausted, evicting registry pages as needed) so exhaustion
+            # never strands a half-activated group — the scheduler catches
+            # the signal and cancels the whole group cleanly
+            shared = len(st.pins[0]) if st.pins else 0
+            pool.require_pages(
+                len(st.slots) * (pool._blocks_for(st.s0) - shared))
             for j, slot in enumerate(st.slots):
                 pool.activate_from_group(
                     slot, st.cache, j, rid=st.rids[j], pos=st.s0,

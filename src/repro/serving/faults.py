@@ -7,7 +7,7 @@ whose draws are consumed in the scheduler's (deterministic) tick order, so
 a scenario is fully described by its :class:`FaultProfile` — rerunning the
 same stream with the same profile injects the identical fault sequence.
 
-Three fault classes, mirroring what real accelerator fleets see:
+Four fault classes, mirroring what real accelerator fleets see:
 
   NaN poisoning     a slot's device cache rows are overwritten with NaN
                     mid-decode (HBM corruption, a bad reduction, an overflow
@@ -25,6 +25,12 @@ Three fault classes, mirroring what real accelerator fleets see:
                     next tick; past the retry budget the group degrades to
                     BLOCKING admission and chunking is disabled for the rest
                     of the run.
+  page pressure     a transient shrink of the paged pool's usable budget:
+                    ``press_pages`` free pages are pinned out for one
+                    decode/verify tick (a co-tenant grabbing HBM, memory
+                    ballooning, fragmentation). Drives the scheduler's
+                    watermark into preempting slots — mid-decode exhaustion
+                    becomes deterministic and testable instead of a crash.
 
 Profiles are wired through ``ServeConfig.faults`` (or passed to the
 scheduler directly), so an engine + config pair pins the whole scenario.
@@ -46,11 +52,14 @@ class FaultProfile:
     stall_rate: float = 0.0       # per busy tick (decode/verify/chunk)
     stall_factor: float = 8.0     # stalled tick duration multiplier
     chunk_fault_rate: float = 0.0  # per chunked-prefill tick
+    press_rate: float = 0.0       # per decode/verify tick on a paged pool
+    press_pages: int = 2          # free pages pinned out per pressure event
     max_faults: int | None = None  # cap on total injected events (None = ∞)
 
     @property
     def enabled(self) -> bool:
-        return self.nan_rate > 0 or self.stall_rate > 0 or self.chunk_fault_rate > 0
+        return (self.nan_rate > 0 or self.stall_rate > 0
+                or self.chunk_fault_rate > 0 or self.press_rate > 0)
 
 
 # named scenarios for the launcher / benchmarks; ``seed`` is overridden by
@@ -73,7 +82,8 @@ def make_profile(spec: str, *, seed: int = 0) -> FaultProfile | None:
             return None
         return dataclasses.replace(prof, seed=seed)
     keys = {"nan": "nan_rate", "stall": "stall_rate", "stallx": "stall_factor",
-            "chunk": "chunk_fault_rate", "max": "max_faults"}
+            "chunk": "chunk_fault_rate", "press": "press_rate",
+            "pressn": "press_pages", "max": "max_faults"}
     kw: dict = {"seed": seed}
     for part in spec.split(","):
         k, _, v = part.partition("=")
@@ -81,7 +91,7 @@ def make_profile(spec: str, *, seed: int = 0) -> FaultProfile | None:
             raise ValueError(
                 f"bad fault spec {spec!r}: want a profile name "
                 f"({sorted(FAULT_PROFILES)}) or comma-joined {sorted(keys)}=float")
-        kw[keys[k]] = int(v) if k == "max" else float(v)
+        kw[keys[k]] = int(v) if k in ("max", "pressn") else float(v)
     prof = FaultProfile(**kw)
     return prof if prof.enabled else None
 
@@ -123,6 +133,17 @@ class FaultInjector:
             self.events += 1
             return self.profile.stall_factor
         return 1.0
+
+    def press(self) -> int:
+        """Pages to pin out of the paged pool for this decode/verify tick
+        (0 = no pressure event). Draws only when the axis is enabled, so
+        profiles without it keep their exact historical draw sequences."""
+        if self.profile.press_rate <= 0:
+            return 0
+        if self.rng.random() < self.profile.press_rate and self._budget_left():
+            self.events += 1
+            return self.profile.press_pages
+        return 0
 
     def chunk_fails(self) -> bool:
         """Whether the current chunked-prefill step's work is lost."""

@@ -39,16 +39,29 @@ class Request:
     prompt: np.ndarray          # (s0,) int32 token ids
     new_tokens: int             # total tokens to emit (>= 1)
     deadline_s: float | None = None  # max latency before counting as missed
+    tier: str = "batch"         # SLO tier: "latency" (interactive) or "batch"
+
+
+def _draw_tiers(n: int, tier_mix: float, seed: int) -> list[str]:
+    """Per-request SLO tiers: each request is "latency" with probability
+    ``tier_mix``. Drawn from a SEPARATE generator so enabling tiers never
+    perturbs a stream's historical prompts/budgets/arrivals."""
+    if tier_mix <= 0:
+        return ["batch"] * n
+    rng = np.random.default_rng(seed + 0x7138)
+    return ["latency" if d < tier_mix else "batch" for d in rng.random(n)]
 
 
 def _materialize(arrivals: np.ndarray, *, seed: int, vocab_size: int,
                  prompt_lens: tuple[int, ...], new_tokens: tuple[int, int],
                  deadline_s: float | None,
-                 prompt_period: int | None = None) -> list[Request]:
+                 prompt_period: int | None = None,
+                 tier_mix: float = 0.0) -> list[Request]:
     rng = np.random.default_rng(seed + 1)
     n = arrivals.size
     lens = rng.choice(np.asarray(prompt_lens), size=n)
     budgets = rng.integers(new_tokens[0], new_tokens[1] + 1, size=n)
+    tiers = _draw_tiers(n, tier_mix, seed)
 
     def prompt(i):
         if prompt_period:
@@ -68,6 +81,7 @@ def _materialize(arrivals: np.ndarray, *, seed: int, vocab_size: int,
             prompt=prompt(i),
             new_tokens=int(budgets[i]),
             deadline_s=deadline_s,
+            tier=tiers[i],
         )
         for i in range(n)
     ]
@@ -77,13 +91,15 @@ def poisson_stream(n: int, *, rate_hz: float, seed: int = 0,
                    vocab_size: int = 256, prompt_lens: tuple[int, ...] = (4, 8, 16),
                    new_tokens: tuple[int, int] = (4, 16),
                    deadline_s: float | None = None,
-                   prompt_period: int | None = None) -> list[Request]:
+                   prompt_period: int | None = None,
+                   tier_mix: float = 0.0) -> list[Request]:
     """Homogeneous Poisson arrivals at ``rate_hz`` requests/second."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
     return _materialize(arrivals, seed=seed, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, new_tokens=new_tokens,
-                        deadline_s=deadline_s, prompt_period=prompt_period)
+                        deadline_s=deadline_s, prompt_period=prompt_period,
+                        tier_mix=tier_mix)
 
 
 def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
@@ -92,7 +108,8 @@ def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
                   prompt_lens: tuple[int, ...] = (4, 8, 16),
                   new_tokens: tuple[int, int] = (4, 16),
                   deadline_s: float | None = None,
-                  prompt_period: int | None = None) -> list[Request]:
+                  prompt_period: int | None = None,
+                  tier_mix: float = 0.0) -> list[Request]:
     """Markov-modulated arrivals: geometric bursts at ``fast_rate_hz``
     separated by geometric quiets at ``slow_rate_hz`` (starts in a burst)."""
     gaps = mmpp_gaps(np.random.default_rng(seed), n, p_leave_busy=p_leave_burst,
@@ -100,7 +117,8 @@ def bursty_stream(n: int, *, fast_rate_hz: float, slow_rate_hz: float,
                      slow_scale=1.0 / slow_rate_hz)
     return _materialize(np.cumsum(gaps), seed=seed, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, new_tokens=new_tokens,
-                        deadline_s=deadline_s, prompt_period=prompt_period)
+                        deadline_s=deadline_s, prompt_period=prompt_period,
+                        tier_mix=tier_mix)
 
 
 def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
@@ -109,7 +127,8 @@ def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
                               burst_factor: float = 3.0,
                               quiet_factor: float = 0.02,
                               deadline_s: float | None = None,
-                              prompt_period: int | None = None) -> list[Request]:
+                              prompt_period: int | None = None,
+                              tier_mix: float = 0.0) -> list[Request]:
     """Bursty stream with rates scaled from a calibration's measured costs:
     sustained bursts (mean ~20 requests) at ``burst_factor``× the mean
     service rate — genuine queue pressure, the regime continuous batching
@@ -123,7 +142,7 @@ def bursty_stream_for_service(cal, n: int, *, vocab_size: int, seed: int = 0,
                          p_leave_burst=0.05, seed=seed,
                          vocab_size=vocab_size, prompt_lens=prompt_lens,
                          new_tokens=new_tokens, deadline_s=deadline_s,
-                         prompt_period=prompt_period)
+                         prompt_period=prompt_period, tier_mix=tier_mix)
 
 
 def flash_crowd_stream(n: int, *, base_rate_hz: float, spike_rate_hz: float,
@@ -132,7 +151,8 @@ def flash_crowd_stream(n: int, *, base_rate_hz: float, spike_rate_hz: float,
                        prompt_lens: tuple[int, ...] = (4, 8, 16),
                        new_tokens: tuple[int, int] = (4, 16),
                        deadline_s: float | None = None,
-                       prompt_period: int | None = None) -> list[Request]:
+                       prompt_period: int | None = None,
+                       tier_mix: float = 0.0) -> list[Request]:
     """Flash-crowd overload: Poisson at ``base_rate_hz`` with a single
     rectangular spike window [spike_start_s, spike_start_s + spike_len_s)
     at ``spike_rate_hz``, via Lewis–Shedler thinning against the spike rate.
@@ -158,14 +178,15 @@ def flash_crowd_stream(n: int, *, base_rate_hz: float, spike_rate_hz: float,
     return _materialize(np.asarray(arrivals[:n]), seed=seed,
                         vocab_size=vocab_size, prompt_lens=prompt_lens,
                         new_tokens=new_tokens, deadline_s=deadline_s,
-                        prompt_period=prompt_period)
+                        prompt_period=prompt_period, tier_mix=tier_mix)
 
 
 def shared_prefix_stream(n: int, *, rate_hz: float, prefix_len: int,
                          tail_len: int, warm_s: float = 0.0, seed: int = 0,
                          vocab_size: int = 256,
                          new_tokens: tuple[int, int] = (4, 16),
-                         deadline_s: float | None = None) -> list[Request]:
+                         deadline_s: float | None = None,
+                         tier_mix: float = 0.0) -> list[Request]:
     """Common-system-prompt traffic: every request's prompt is one shared
     ``prefix_len``-token prefix (drawn once per stream) followed by a
     per-request random ``tail_len``-token tail — the application-specific
@@ -179,6 +200,7 @@ def shared_prefix_stream(n: int, *, rate_hz: float, prefix_len: int,
     arrivals = np.concatenate(
         [[0.0], warm_s + np.cumsum(rng.exponential(1.0 / rate_hz, n - 1))])
     budgets = rng.integers(new_tokens[0], new_tokens[1] + 1, size=n)
+    tiers = _draw_tiers(n, tier_mix, seed)
     return [
         Request(
             rid=i,
@@ -187,6 +209,7 @@ def shared_prefix_stream(n: int, *, rate_hz: float, prefix_len: int,
                 [prefix, rng.integers(0, vocab_size, tail_len).astype(np.int32)]),
             new_tokens=int(budgets[i]),
             deadline_s=deadline_s,
+            tier=tiers[i],
         )
         for i in range(n)
     ]
@@ -203,7 +226,8 @@ def diurnal_stream(n: int, *, base_rate_hz: float, peak_rate_hz: float,
                    prompt_lens: tuple[int, ...] = (4, 8, 16),
                    new_tokens: tuple[int, int] = (4, 16),
                    deadline_s: float | None = None,
-                   prompt_period: int | None = None) -> list[Request]:
+                   prompt_period: int | None = None,
+                   tier_mix: float = 0.0) -> list[Request]:
     """Rate-varying Poisson, λ(t) = base + (peak-base)·(1+sin(2πt/T))/2,
     sampled by Lewis–Shedler thinning against the peak rate."""
     assert peak_rate_hz >= base_rate_hz > 0
@@ -222,4 +246,5 @@ def diurnal_stream(n: int, *, base_rate_hz: float, peak_rate_hz: float,
     arrivals = np.asarray(arrivals[:n])
     return _materialize(arrivals, seed=seed, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, new_tokens=new_tokens,
-                        deadline_s=deadline_s, prompt_period=prompt_period)
+                        deadline_s=deadline_s, prompt_period=prompt_period,
+                        tier_mix=tier_mix)

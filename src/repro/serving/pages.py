@@ -62,6 +62,44 @@ Speculative verify windows need no ``spec_slack`` spare rows here: the
 table always has at least one spare block past ``max_len``, and tail
 blocks are allocated on demand by ``ensure_writable`` — rejected-draft
 writes land in pages the slot owns, never in a neighbour's rows.
+
+Memory pressure: typed exhaustion, watermark, preemption
+--------------------------------------------------------
+
+``can_admit`` bounds the worst case of co-resident *reservations*, but
+mid-tick on-demand allocation can still outrun the pool: speculative
+verify windows extend past a slot's reserved budget (rejected-draft tail
+blocks), force-exclusive COW (``poison``) is outside every estimate, the
+LRU-evictable registry count can go stale between probe and allocation,
+and the page-pressure fault (``pin_free_pages``) transiently shrinks the
+free list. Exhaustion is therefore a SCHEDULING EVENT, not a crash:
+
+  * allocation failure is TYPED — ``_alloc_page`` returns a
+    :class:`PageExhausted` signal instead of raising ``RuntimeError``;
+    every lifecycle caller either unwinds cleanly (``admit`` /
+    ``swap_in`` release partial allocations and un-claim the slot) or
+    flushes its committed device work first (``ensure_writable``), then
+    raises the typed signal for the scheduler to catch.
+  * the WATERMARK contract: before a decode/verify tick the scheduler
+    sums ``blocks_needed(slot, pos, pos + span)`` over the decoding
+    slots (span = 1 or the K+1 verify window — unmapped blocks plus
+    shared blocks whose write needs a COW page) and compares against
+    ``free + evictable - reserved_admitting()``. Demand past the mark is
+    relieved by PREEMPTING victims *before* the tick runs, so
+    ``ensure_writable`` almost never sees an empty pool; when it still
+    does (stale estimate), the scheduler catches ``PageExhausted``,
+    preempts, and retries the tick.
+  * PREEMPTION restores a victim by one of two exact paths: ``swap_out``
+    copies the victim's mapped pages (positions [0, pos)) plus its
+    unpaged per-slot rows to host buffers and releases the slot;
+    ``swap_in`` re-maps the bytes into fresh pages — bit-identical
+    state, so the continuation is trivially token-for-token. The
+    alternative (cheaper for short contexts) is recompute: retire the
+    slot and re-prefill prompt + committed tokens through the engine's
+    ``resume_into_slot``, the same path quarantine-retry uses. Verify
+    tail blocks past ``pos`` are dropped by either path — they only ever
+    held rejected drafts — so a preempt/restore cycle shrinks a slot's
+    footprint back inside its reservation.
 """
 from __future__ import annotations
 
@@ -78,6 +116,22 @@ from repro.serving.kv_cache import cache_defs, page_defs, paged_keys
 from repro.serving.slots import SlotInfo, SlotPool
 
 SCRATCH = 0  # reserved physical page: unmapped / redirected writes land here
+
+
+class PageExhausted(Exception):
+    """Typed allocation-failure signal: the page pool (free list plus
+    LRU-evictable registry pages) cannot supply the requested pages.
+
+    ``_alloc_page`` RETURNS an instance instead of raising, so lifecycle
+    methods can unwind partial allocations first and then ``raise`` it for
+    the scheduler, which treats exhaustion as a preemption event — never a
+    crash."""
+
+    def __init__(self, need: int = 1, free: int = 0):
+        super().__init__(
+            f"page pool exhausted: need {need} page(s), {free} free/evictable")
+        self.need = need
+        self.free = free
 
 
 class PagePool:
@@ -179,6 +233,11 @@ class PagedSlotPool(SlotPool):
         self.cow_copies = 0
         self.shared_hit_pages = 0
         self.evictions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_bytes = 0
+        # page-pressure fault: transiently pinned-out free pages
+        self._press_pins: list[int] = []
         self._admit_jit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._activate_jit = jax.jit(self._activate_impl, donate_argnums=(0,),
                                      static_argnames=("bs", "nb"))
@@ -191,6 +250,7 @@ class PagedSlotPool(SlotPool):
                                        donate_argnums=(0,))
         self._zero_row_jit = jax.jit(self._zero_row_impl, donate_argnums=(0,))
         self._nan_jit = jax.jit(self._nan_impl, donate_argnums=(0,))
+        self._restore_jit = jax.jit(self._restore_impl, donate_argnums=(0,))
 
     # -- device-side primitives (pool-owned jits) ----------------------------
     def _admit_impl(self, cache, req_cache, slot, pids):
@@ -280,6 +340,19 @@ class PagedSlotPool(SlotPool):
                 leaf, jnp.zeros_like(row), slot, axis=1)
         return out
 
+    def _restore_impl(self, cache, pages, row, slot, pids):
+        """Swap-in: scatter a host image's page blocks back to fresh pages
+        and its unpaged per-slot rows back into the slot row — the exact
+        bytes ``swap_out`` gathered, so the restore is bit-identical."""
+        out = {}
+        for key, leaf in cache.items():
+            if key in self._pkeys:
+                out[key] = leaf.at[:, pids].set(pages[key].astype(leaf.dtype))
+            else:
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    leaf, row[key].astype(leaf.dtype), slot, axis=1)
+        return out
+
     def _nan_impl(self, cache, pids, slot):
         out = dict(cache)
         for key, leaf in cache.items():
@@ -328,19 +401,77 @@ class PagedSlotPool(SlotPool):
                 return True
         return False
 
-    def _alloc_page(self) -> int:
+    def _alloc_page(self) -> int | PageExhausted:
+        """One fresh page, evicting LRU registry pages if the free list is
+        dry. Exhaustion is TYPED: returns a ``PageExhausted`` signal (never
+        raises ``RuntimeError``) so callers can unwind before raising."""
         pid = self.pages.alloc()
         if pid is None and self._evict_one():
             pid = self.pages.alloc()
         if pid is None:
-            raise RuntimeError(
-                "page pool exhausted: admission control (can_admit) should "
-                "have bounded concurrent reservations below num_pages")
+            return PageExhausted(need=1, free=self.pages.free_count)
         if pid in self._tainted:  # recycled from a poisoned slot: scrub
             self.cache = self._zero_pages_jit(
                 self.cache, jnp.asarray([pid], jnp.int32))
             self._tainted.discard(pid)
         return pid
+
+    def _alloc_pages(self, n: int) -> list[int] | PageExhausted:
+        """``n`` fresh pages, all-or-nothing: on exhaustion every page
+        already taken is released and the signal is returned."""
+        pids: list[int] = []
+        for _ in range(n):
+            pid = self._alloc_page()
+            if isinstance(pid, PageExhausted):
+                for p in pids:
+                    self.pages.decref(p)
+                return PageExhausted(need=n, free=self.pages.free_count)
+            pids.append(pid)
+        return pids
+
+    def require_pages(self, n: int) -> None:
+        """Assert ``n`` pages are obtainable NOW (evicting registry pages as
+        needed) or raise ``PageExhausted`` — used to make multi-slot commits
+        (chunked-group activation) atomic: check before touching any slot."""
+        while self.pages.free_count < n and self._evict_one():
+            pass
+        if self.pages.free_count < n:
+            raise PageExhausted(need=n, free=self.pages.free_count)
+
+    def reserved_admitting(self) -> int:
+        """Worst-case pages still owed to in-flight admitting groups — the
+        share of the pool a decode/verify tick must not consume."""
+        occ = self.active & self.admitting
+        return int(np.maximum(self._resv - self._owned, 0)[occ].sum())
+
+    def blocks_needed(self, slot: int, start: int, end: int) -> int:
+        """Fresh pages ``ensure_writable(slot, start, end)`` would allocate
+        right now: unmapped blocks plus shared blocks needing a COW copy.
+        The scheduler's pre-tick watermark sums this over decoding slots."""
+        need = 0
+        for blk in range(start // self.page, (end - 1) // self.page + 1):
+            pid = int(self.table[slot, blk])
+            if pid == SCRATCH or self.pages.refcount[pid] > 1:
+                need += 1
+        return need
+
+    def pin_free_pages(self, n: int) -> list[int]:
+        """Page-pressure fault: pin up to ``n`` FREE pages out of the pool
+        (no registry eviction — the squeeze is transient). Release with
+        ``unpin_pages`` at the end of the tick."""
+        pids: list[int] = []
+        for _ in range(n):
+            pid = self.pages.alloc()
+            if pid is None:
+                break
+            pids.append(pid)
+        self._press_pins.extend(pids)
+        return pids
+
+    def unpin_pages(self, pids) -> None:
+        for pid in pids:
+            self._press_pins.remove(pid)
+            self.pages.decref(pid)
 
     # -- prefix registry -----------------------------------------------------
     def _block_digests(self, prompt: np.ndarray) -> list[bytes]:
@@ -408,22 +539,31 @@ class PagedSlotPool(SlotPool):
         (host-side) before every decode/verify tick's write span."""
         assert self.active[slot] and not self.admitting[slot]
         srcs, dsts = [], []
-        for blk in range(start // self.page, (end - 1) // self.page + 1):
-            pid = int(self.table[slot, blk])
-            if pid == SCRATCH:
-                self.table[slot, blk] = self._alloc_page()
-                self._owned[slot] += 1
-            elif self.pages.refcount[pid] > 1:
-                npid = self._alloc_page()
-                srcs.append(pid)
-                dsts.append(npid)
-                self.pages.decref(pid)  # shared: cannot hit 0 here
-                self.table[slot, blk] = npid
-                self.cow_copies += 1
-        if srcs:
-            self.cache = self._copy_pages_jit(
-                self.cache, jnp.asarray(srcs, jnp.int32),
-                jnp.asarray(dsts, jnp.int32))
+        try:
+            for blk in range(start // self.page, (end - 1) // self.page + 1):
+                pid = int(self.table[slot, blk])
+                if pid == SCRATCH:
+                    npid = self._alloc_page()
+                    if isinstance(npid, PageExhausted):
+                        raise npid  # table untouched for this block
+                    self.table[slot, blk] = npid
+                    self._owned[slot] += 1
+                elif self.pages.refcount[pid] > 1:
+                    npid = self._alloc_page()
+                    if isinstance(npid, PageExhausted):
+                        raise npid  # COW not started for this block
+                    srcs.append(pid)
+                    dsts.append(npid)
+                    self.pages.decref(pid)  # shared: cannot hit 0 here
+                    self.table[slot, blk] = npid
+                    self.cow_copies += 1
+        finally:
+            # flush COW copies for the blocks already repointed, even on the
+            # typed-exhaustion path — the table must never point at garbage
+            if srcs:
+                self.cache = self._copy_pages_jit(
+                    self.cache, jnp.asarray(srcs, jnp.int32),
+                    jnp.asarray(dsts, jnp.int32))
 
     # -- lifecycle overrides -------------------------------------------------
     def admit(self, slot: int, req_cache: dict, *, rid: int, pos: int,
@@ -436,7 +576,12 @@ class PagedSlotPool(SlotPool):
         assert 1 <= emitted <= budget
         self._claim(slot)
         nb = self._blocks_for(pos)
-        pids = [self._alloc_page() for _ in range(nb)]
+        pids = self._alloc_pages(nb)
+        if isinstance(pids, PageExhausted):
+            self.active[slot] = False  # unwind the claim cleanly
+            self.slots[slot] = SlotInfo()
+            self._free.appendleft(slot)
+            raise pids
         self.table[slot, :] = SCRATCH
         self.table[slot, :nb] = pids
         self._owned[slot] = nb
@@ -472,7 +617,9 @@ class PagedSlotPool(SlotPool):
         bs = len(pins)
         nb = self._blocks_for(pos)
         assert bs < nb, (bs, nb)  # the last prompt position is never shared
-        delta = [self._alloc_page() for _ in range(nb - bs)]
+        delta = self._alloc_pages(nb - bs)
+        if isinstance(delta, PageExhausted):
+            raise delta  # slot stays admitting; the group cancels atomically
         self.table[slot, :] = SCRATCH
         self.table[slot, :bs] = pins
         self.table[slot, bs:nb] = delta
@@ -527,6 +674,12 @@ class PagedSlotPool(SlotPool):
             pid = int(self.table[slot, blk])
             if pid != SCRATCH and self.pages.refcount[pid] > 1:
                 npid = self._alloc_page()
+                if isinstance(npid, PageExhausted):
+                    # exhaustion-tolerant: leave this block shared and clean.
+                    # The slot's exclusive pages and unpaged rows still get
+                    # NaN'd below, so the fault is detected and quarantined;
+                    # innocent sharers keep their bytes either way.
+                    continue
                 srcs.append(pid)
                 dsts.append(npid)
                 self.pages.decref(pid)
@@ -536,7 +689,10 @@ class PagedSlotPool(SlotPool):
             self.cache = self._copy_pages_jit(
                 self.cache, jnp.asarray(srcs, jnp.int32),
                 jnp.asarray(dsts, jnp.int32))
-        pids = [int(p) for p in self.table[slot] if p != SCRATCH]
+        # NaN only exclusively-owned pages: a block whose COW was skipped
+        # under exhaustion is still shared and MUST keep its clean bytes
+        pids = [int(p) for p in self.table[slot]
+                if p != SCRATCH and self.pages.refcount[int(p)] == 1]
         self.cache = self._nan_jit(self.cache, jnp.asarray(pids, jnp.int32),
                                    jnp.int32(slot))
         self._slot_tainted.add(slot)
@@ -567,6 +723,76 @@ class PagedSlotPool(SlotPool):
         self._resv[slot] = 0
         super().retire(slot)
 
+    # -- preemption: swap-out / swap-in --------------------------------------
+    def swap_image_bytes(self, slot: int) -> int:
+        """Host-buffer size a ``swap_out`` of ``slot`` would produce — the
+        deterministic input to the scheduler's swap-vs-recompute cost model,
+        computable before building the image."""
+        nb = self._blocks_for(self.slots[slot].pos)
+        page_b = sum(self.cache[k].nbytes // self.num_pages
+                     for k in self._pkeys)
+        row_b = sum(v.nbytes // self.max_batch
+                    for k, v in self.cache.items() if k not in self._pkeys)
+        return nb * page_b + row_b
+
+    def swap_out(self, slot: int) -> dict:
+        """Preempt ``slot`` by copying its state to host buffers: the pages
+        mapping positions [0, pos) (every one written, hence mapped) plus the
+        unpaged per-slot rows (SSM conv/state, audio cross K/V — the FULL
+        state for those families), with the slot bookkeeping needed to
+        continue. Verify-tail blocks past ``pos`` held only rejected drafts
+        and are dropped. The slot is then released; restore with
+        ``swap_in`` is bit-identical."""
+        assert self.active[slot] and not self.admitting[slot]
+        assert slot not in self._slot_tainted, "cannot swap a poisoned slot"
+        info = self.slots[slot]
+        nb = self._blocks_for(info.pos)
+        pids = [int(self.table[slot, b]) for b in range(nb)]
+        assert SCRATCH not in pids, (slot, pids)
+        idx = jnp.asarray(pids, jnp.int32)
+        pages = {k: np.asarray(self.cache[k][:, idx]) for k in self._pkeys}
+        row = {k: np.asarray(v[:, slot : slot + 1])
+               for k, v in self.cache.items() if k not in self._pkeys}
+        image = {
+            "rid": info.rid, "pos": info.pos, "budget": info.budget,
+            "emitted": info.emitted, "tier": info.tier,
+            "tok": int(self.tok[slot]), "resv": int(self._resv[slot]),
+            "pages": pages, "row": row,
+            "bytes": sum(a.nbytes for a in (*pages.values(), *row.values())),
+        }
+        self.swap_outs += 1
+        self.swapped_bytes += image["bytes"]
+        self.retire(slot)
+        return image
+
+    def swap_in(self, slot: int, image: dict) -> None:
+        """Restore a ``swap_out`` image into a free slot: map fresh pages and
+        scatter the saved bytes back through the table. Raises
+        ``PageExhausted`` (after a clean unwind) when the pool cannot supply
+        the image's blocks — the scheduler retries once pages free up."""
+        nb = self._blocks_for(image["pos"])
+        self._claim(slot)
+        pids = self._alloc_pages(nb)
+        if isinstance(pids, PageExhausted):
+            self.active[slot] = False
+            self._free.appendleft(slot)
+            raise pids
+        self.table[slot, :] = SCRATCH
+        self.table[slot, :nb] = pids
+        self._owned[slot] = nb
+        self._resv[slot] = image["resv"]
+        self.cache = self._restore_jit(
+            self.cache,
+            {k: jnp.asarray(v) for k, v in image["pages"].items()},
+            {k: jnp.asarray(v) for k, v in image["row"].items()},
+            jnp.int32(slot), jnp.asarray(pids, jnp.int32))
+        self.slots[slot] = SlotInfo(rid=image["rid"], pos=image["pos"],
+                                    budget=image["budget"],
+                                    emitted=image["emitted"],
+                                    tier=image["tier"])
+        self.tok[slot] = image["tok"]
+        self.swap_ins += 1
+
     # -- invariants (exercised by tests/test_pages.py) -----------------------
     def check_invariants(self) -> None:
         """Refcount conservation: every page's refcount equals its table
@@ -581,6 +807,8 @@ class PagedSlotPool(SlotPool):
             refs[pid] += 1
         pinned = getattr(self, "_extra_pins", ())
         for pid in pinned:
+            refs[pid] += 1
+        for pid in self._press_pins:
             refs[pid] += 1
         assert (refs == self.pages.refcount).all(), (
             refs.tolist(), self.pages.refcount.tolist())

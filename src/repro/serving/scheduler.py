@@ -76,6 +76,32 @@ Robustness layer (overload + faults are routine at deployment scale):
              a per-request acceptance-EMA throttle halves a stalling
              request's draft window (regrowing on recovery), and a pool
              whose windows all hit 0 falls back to plain decode ticks.
+  PREEMPTION   (paged pools) page exhaustion is a scheduling event, never a
+             crash. A WATERMARK runs before every decode/verify tick: the
+             worst-case page growth of the tick (decode boundary crossings,
+             the K+1 speculative window, pending COW) is summed via
+             ``PagedSlotPool.blocks_needed`` and compared against
+             free + evictable pages net of admitting-group reservations;
+             demand past the mark preempts victims picked by a pluggable
+             ``PreemptionPolicy`` (SLO tier, deadline slack, page
+             footprint, progress). Each victim is restored by whichever
+             path the fixed cost model prices cheaper: SWAP (pages copied
+             to a host buffer at ``chip.reload_bw``, restored into fresh
+             pages bit-identically) or RECOMPUTE (re-prefill of prompt +
+             committed tokens through ``resume_into_slot``, exactly the
+             quarantine-retry path) — both charged to the energy ledger
+             and surfaced as preemption waste. Victims re-enter through
+             the retry queue WITHOUT consuming retry budget (preemption is
+             the scheduler's fault, not the request's). If a tick still
+             hits ``PageExhausted`` (stale evictable estimate, page-
+             pressure fault), the scheduler catches it, preempts one more
+             victim, and retries the tick.
+  SLO TIERS    ``Request.tier`` ("latency" | "batch") drives preemption:
+             latency-tier requests are promoted to the head of the ready
+             queue, and a latency arrival that cannot admit may preempt a
+             batch-tier slot instead of queueing. Preempted batch requests
+             re-admit from the retry queue, so batch traffic is delayed,
+             never starved.
 
 ``run_static_batches`` is the baseline this subsystem replaces: fixed-batch
 lockstep serving (wait to fill a batch or flush on timeout, pad every
@@ -99,7 +125,7 @@ from repro.serving.draft import NgramDrafter, SpecThrottle
 from repro.serving.engine import ChunkedPrefillState, InferenceEngine, tpu_reload_costs
 from repro.serving.faults import FaultInjector, FaultProfile
 from repro.serving.load import Request
-from repro.serving.pages import PagedSlotPool
+from repro.serving.pages import PageExhausted, PagedSlotPool
 from repro.serving.policy import DutyCyclePolicy, make_policy
 from repro.serving.slots import SlotPool
 
@@ -202,6 +228,52 @@ class FixedCalibration:
 
 
 # ---------------------------------------------------------------------------
+# Preemption victim selection
+# ---------------------------------------------------------------------------
+class PreemptionPolicy:
+    """Ranks decoding slots as preemption victims (best victim first).
+
+    Candidates are dicts the scheduler builds per decoding slot:
+    ``{"slot", "tier", "slack", "pages", "progress"}`` where ``slack`` is
+    seconds until the request's deadline (inf when deadline-free),
+    ``pages`` its owned page count, ``progress`` emitted/budget. Orders:
+
+      tiered     batch tier before latency, then most slack, then largest
+                 footprint, then least progress (the default — protects
+                 interactive traffic, frees the most pages per preempt)
+      footprint  largest footprint first, tier-blind (pure memory relief)
+      slack      most deadline slack first, tier-blind (deadline-safest)
+
+    All orders break ties on slot index, so victim choice is deterministic.
+    """
+
+    ORDERS = ("tiered", "footprint", "slack")
+
+    def __init__(self, order: str = "tiered"):
+        if order not in self.ORDERS:
+            raise ValueError(
+                f"unknown preemption order {order!r}: want one of {self.ORDERS}")
+        self.order = order
+
+    def _key(self, c: dict):
+        if self.order == "tiered":
+            return (0 if c["tier"] == "batch" else 1, -c["slack"],
+                    -c["pages"], c["progress"], c["slot"])
+        if self.order == "footprint":
+            return (-c["pages"], -c["slack"], c["progress"], c["slot"])
+        return (-c["slack"], -c["pages"], c["progress"], c["slot"])
+
+    def rank(self, candidates: list[dict]) -> list[dict]:
+        return sorted(candidates, key=self._key)
+
+
+def make_preemption_policy(spec: str | PreemptionPolicy | None):
+    if spec is None or isinstance(spec, PreemptionPolicy):
+        return spec
+    return PreemptionPolicy(spec)
+
+
+# ---------------------------------------------------------------------------
 # Per-request ledger + report
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -248,6 +320,11 @@ class ServeReport:
     peak_active: int = 0       # max concurrently occupied slots (capacity)
     shared_hit_pages: int = 0  # prefix-registry pages mapped read-only (paged)
     cow_copies: int = 0        # copy-on-write page copies performed (paged)
+    evictions: int = 0         # prefix-registry pages LRU-evicted (paged)
+    preempted: int = 0         # slots preempted under memory/tier pressure
+    swapped: int = 0           # preemptions restored via swap-out/swap-in
+    recomputed: int = 0        # preemptions restored via re-prefill
+    preempt_wasted_j: float = 0.0  # swap transfers + restore re-prefills
 
     @property
     def items(self) -> int:
@@ -307,6 +384,12 @@ class ServeReport:
         if self.stragglers or self.degraded or self.throttled_ticks:
             extra += (f" straggle={self.stragglers} degraded={self.degraded} "
                       f"throttled={self.throttled_ticks}")
+        if self.preempted:
+            extra += (f" preempt={self.preempted} swap={self.swapped} "
+                      f"recomp={self.recomputed} "
+                      f"preempt_waste={self.preempt_wasted_j:.3f}J")
+        if self.evictions:
+            extra += f" evict={self.evictions}"
         return (f"{self.mode:11s} items={self.items} items/J={self.items_per_joule:.5f} "
                 f"p50={self.p50_s * 1e3:.1f}ms p99={self.p99_s * 1e3:.1f}ms "
                 f"reloads={self.reloads} missed={self.missed}{extra}")
@@ -381,6 +464,14 @@ class ContinuousBatchingScheduler:
                        requests shrink their draft window to 0 and the tick
                        falls back to plain decode; windows regrow on
                        recovery.
+      ``preempt``      (paged pools) a ``PreemptionPolicy`` (or its order
+                       name) enabling the memory-pressure watermark, SLO-
+                       tier preemption of batch slots by latency arrivals,
+                       and swap/recompute restore; ``swap=False`` forces
+                       every restore down the recompute path. Even with
+                       ``preempt=None``, paged runs never crash on page
+                       exhaustion: a mid-tick ``PageExhausted`` triggers an
+                       emergency preempt-and-retry with a default policy.
     """
 
     def __init__(self, engine: InferenceEngine, *,
@@ -394,9 +485,15 @@ class ContinuousBatchingScheduler:
                  faults: FaultProfile | None = None,
                  retry: RestartPolicy | None = None,
                  spec_throttle: bool = False,
-                 detector: StragglerDetector | None = None):
+                 detector: StragglerDetector | None = None,
+                 preempt: str | PreemptionPolicy | None = None,
+                 swap: bool = True):
         if not execute and calibration is None:
             raise ValueError("execute=False needs an explicit calibration")
+        if preempt is not None and not (execute and engine.sc.paged):
+            raise ValueError(
+                "preempt requires a real paged pool (execute=True and "
+                "ServeConfig.paged=True): preemption swaps/recomputes pages")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if speculate_k is not None and speculate_k < 1:
@@ -433,6 +530,8 @@ class ContinuousBatchingScheduler:
                        else make_policy(policy, self.profile, **(policy_kw or {})))
         self.shed = shed
         self.queue_limit = queue_limit
+        self.preempter = make_preemption_policy(preempt)
+        self.swap = swap
         self.faults = faults if faults is not None else sc.faults
         # backoff lives in VIRTUAL time, so the default scales with the
         # measured step: first retry waits ~2 ticks, growing 2x per attempt
@@ -516,6 +615,7 @@ class ContinuousBatchingScheduler:
                 for r in reqs}
         deadlines = {r.rid: r.deadline_s for r in reqs}
         by_rid = {r.rid: r for r in reqs}
+        tiers = {r.rid: getattr(r, "tier", "batch") for r in reqs}
         self.admitted = self.completed = self.chunks = 0
         self.verify_ticks = self.accepted_tokens = 0
         self.policy.busy_s.clear()  # per-run ledger (τ estimator state persists)
@@ -536,6 +636,11 @@ class ContinuousBatchingScheduler:
         chunk_disabled = False
         shed = retried = quarantined = failed = 0
         chunk_faults = stragglers = degraded = throttled = 0
+        preempted = swapped = recomputed = 0
+        preempt_waste = 0.0
+        press_pins: list[int] = []
+        force_plain = False  # one-shot spec→plain fallback after exhaustion
+        paged = isinstance(pool, PagedSlotPool)
         peak_active = 0
         guard = 0
         cn = self.prefill_chunk or 1
@@ -545,6 +650,10 @@ class ContinuousBatchingScheduler:
             # every retry re-prefills and re-runs up to a request's whole
             # decode; scale the progress guard by the retry budget
             guard_max *= 2 + self.retry.max_restarts
+        if paged and (self.preempter is not None or (
+                self.faults is not None and self.faults.press_rate > 0)):
+            # preempt/restore cycles add bounded extra iterations per event
+            guard_max *= 4
 
         def ingest() -> None:
             """Move everything that has arrived by ``t`` into the ready
@@ -602,41 +711,170 @@ class ContinuousBatchingScheduler:
                             "budget": budget, "emitted": emitted})
 
         def admit_retry(e: dict) -> None:
-            """Re-admit a quarantined request: blocking re-prefill of its
-            COMMITTED context, with the last committed token as the next
-            decode input — the greedy continuation is token-for-token what
-            a fault-free run emits."""
-            nonlocal t, shed, retried
+            """Re-admit a quarantined or preempted request. Quarantine and
+            recompute-restore entries do a blocking re-prefill of the
+            request's COMMITTED context with the last committed token as the
+            next decode input — the greedy continuation is token-for-token
+            what an undisturbed run emits. Swap-restore entries re-map the
+            host image into fresh pages (bit-identical bytes) and pay only
+            the transfer time."""
+            nonlocal t, shed, retried, preempt_waste
             rid = e["rid"]
             r, rec = by_rid[rid], recs[rid]
             emitted, budget = e["emitted"], e["budget"]
-            context = np.asarray(list(r.prompt) + rec.tokens[:emitted - 1],
-                                 np.int32)
-            if self._infeasible(t, len(context), budget - emitted,
+            image = e.get("image")
+            ctx_len = len(r.prompt) + emitted - 1
+            if self._infeasible(t, ctx_len, budget - emitted,
                                 r.arrival_s, deadlines[rid]):
                 rec.shed = True  # shed at retry: the sunk energy is wasted
                 shed += 1
                 return
             slot = pool.next_free()
-            tp = self.cal.prefill_s(1, len(context))
-            next_tok = rec.tokens[emitted - 1]
-            if self.execute:
-                self.engine.resume_into_slot(pool, slot, context, rid=rid,
-                                             budget=budget, emitted=emitted,
-                                             next_tok=next_tok)
+            if image is not None:
+                dt = image["bytes"] / (chip.reload_bw * chips)
+                pool.swap_in(slot, image)
+                t += dt
+                self.policy.on_busy("swap", dt)
+                ej = chip.p_idle_w * chips * dt
+                rec.energy_j += ej
+                preempt_waste += ej
             else:
-                pool.admit_virtual(slot, rid=rid, pos=len(context),
-                                   budget=budget, emitted=emitted)
-                pool.tok[slot] = next_tok
-            t += tp
-            self.policy.on_busy("prefill", tp)
-            rec.energy_j += chip.step_power(self.prefill_util) * chips * tp
-            rec.retries += 1
-            retried += 1
+                context = np.asarray(list(r.prompt) + rec.tokens[:emitted - 1],
+                                     np.int32)
+                tp = self.cal.prefill_s(1, len(context))
+                next_tok = rec.tokens[emitted - 1]
+                if self.execute:
+                    self.engine.resume_into_slot(pool, slot, context, rid=rid,
+                                                 budget=budget, emitted=emitted,
+                                                 next_tok=next_tok)
+                else:
+                    pool.admit_virtual(slot, rid=rid, pos=len(context),
+                                       budget=budget, emitted=emitted)
+                    pool.tok[slot] = next_tok
+                t += tp
+                self.policy.on_busy("prefill", tp)
+                ej = chip.step_power(self.prefill_util) * chips * tp
+                rec.energy_j += ej
+                if e.get("preempt"):
+                    preempt_waste += ej
+            pool.slots[slot].tier = tiers[rid]
+            if not e.get("preempt"):
+                rec.retries += 1
+                retried += 1
             if self.drafter is not None:
                 self.drafter.begin(rid, list(r.prompt) + rec.tokens[:emitted])
             if self.throttle is not None:
                 self.throttle.begin(rid)
+
+        def victim_candidates(tier_only: str | None = None) -> list[dict]:
+            """Per-decoding-slot facts the ``PreemptionPolicy`` ranks on.
+            Poisoned (tainted) slots are excluded — they are about to be
+            quarantined anyway and cannot be swapped."""
+            out = []
+            for s in pool.decoding_slots():
+                info = pool.slots[s]
+                if paged and s in pool._slot_tainted:
+                    continue
+                if tier_only is not None and info.tier != tier_only:
+                    continue
+                dl = deadlines.get(info.rid)
+                slack = (recs[info.rid].arrival_s + dl - t
+                         if dl is not None else math.inf)
+                out.append({"slot": s, "tier": info.tier, "slack": slack,
+                            "pages": int(pool._owned[s]),
+                            "progress": info.emitted / max(info.budget, 1)})
+            return out
+
+        def preempt_slot(slot: int) -> None:
+            """Preempt a healthy decoding slot: the fixed cost model picks
+            swap (2 transfers at reload bandwidth) vs recompute (one
+            re-prefill of the committed context); the request re-enters
+            through the retry queue at once, WITHOUT charging its retry
+            budget — preemption is the scheduler's doing, not a fault."""
+            nonlocal t, preempted, swapped, recomputed, preempt_waste
+            nonlocal progressed
+            info = pool.slots[slot]
+            rid, budget, emitted = info.rid, info.budget, info.emitted
+            rec = recs[rid]
+            image = None
+            if self.swap:
+                sbytes = pool.swap_image_bytes(slot)
+                t_swap = 2 * sbytes / (chip.reload_bw * chips)
+                t_rec = self.cal.prefill_s(1, len(by_rid[rid].prompt)
+                                           + emitted - 1)
+                if t_swap <= t_rec:
+                    image = pool.swap_out(slot)
+                    dt = image["bytes"] / (chip.reload_bw * chips)
+                    t += dt
+                    self.policy.on_busy("swap", dt)
+                    ej = chip.p_idle_w * chips * dt
+                    rec.energy_j += ej
+                    preempt_waste += ej
+                    swapped += 1
+            if image is None:
+                pool.retire(slot)
+                recomputed += 1
+            preempted += 1
+            progressed = True  # state changed; never an idle-gap this tick
+            if self.drafter is not None:
+                self.drafter.forget(rid)
+            if self.throttle is not None:
+                self.throttle.forget(rid)
+            retry_q.append({"rid": rid, "ready_at": t, "budget": budget,
+                            "emitted": emitted, "image": image,
+                            "preempt": True})
+
+        def relieve_pressure(span: int) -> None:
+            """The pre-tick WATERMARK: the worst-case page growth of this
+            decode/verify tick (every decoding slot's write span) must fit
+            in free + evictable pages net of admitting-group reservations;
+            demand past the mark preempts policy-ranked victims BEFORE the
+            tick, so mid-tick exhaustion is the exception, not the rule."""
+            while True:
+                decoding = pool.decoding_slots()
+                if len(decoding) <= 1:
+                    return  # a lone slot self-resolves via the typed path
+                demand = sum(
+                    pool.blocks_needed(s, pool.slots[s].pos,
+                                       pool.slots[s].pos + span)
+                    for s in decoding)
+                avail = (pool.pages.free_count + pool._evictable()
+                         - pool.reserved_admitting())
+                if demand <= avail:
+                    return
+                cands = victim_candidates()
+                if not cands:
+                    return
+                preempt_slot(self.preempter.rank(cands)[0]["slot"])
+
+        def emergency_preempt() -> bool:
+            """``PageExhausted`` escaped a tick despite the watermark (stale
+            evictable estimate, pressure fault, no preempter configured):
+            preempt the best victim and let the loop retry the tick. Typed
+            recovery — the crash-era RuntimeError is gone."""
+            cands = victim_candidates()
+            if not cands:
+                return False
+            pol = self.preempter or PreemptionPolicy()
+            preempt_slot(pol.rank(cands)[0]["slot"])
+            return True
+
+        def promote_latency() -> None:
+            """Stable-partition the ready queue: latency-tier requests (in
+            arrival order) ahead of batch-tier. Only active with a
+            preemption policy, so tierless runs keep exact FIFO order."""
+            if not any(tiers[r.rid] == "latency" for r in ready):
+                return
+            lat = [r for r in ready if tiers[r.rid] == "latency"]
+            bat = [r for r in ready if tiers[r.rid] != "latency"]
+            ready.clear()
+            ready.extend(lat + bat)
+
+        def release_press() -> None:
+            nonlocal press_pins
+            if press_pins:
+                pool.unpin_pages(press_pins)
+                press_pins = []
 
         def observe_tick(dur: float) -> None:
             nonlocal stragglers
@@ -651,19 +889,47 @@ class ContinuousBatchingScheduler:
             ingest()
             shed_scan()
 
-            # quarantined requests re-admit FIRST — they hold committed work
-            # (re-admission needs the context's worst-case page budget too:
-            # s0 = prompt + already-emitted tokens, budget = the remainder)
+            # quarantined/preempted requests re-admit FIRST — they hold
+            # committed work (re-admission needs the context's worst-case
+            # page budget too: s0 = prompt + already-emitted tokens,
+            # budget = the remainder). With tiers on, latency-tier entries
+            # restore ahead of batch-tier ones.
             while pool.free_count and retry_q:
+                scan = (sorted(range(len(retry_q)),
+                               key=lambda j: tiers[retry_q[j]["rid"]] != "latency")
+                        if self.preempter is not None else range(len(retry_q)))
                 idx = next(
-                    (j for j, e in enumerate(retry_q)
-                     if e["ready_at"] <= t and pool.can_admit(
-                         len(by_rid[e["rid"]].prompt) + e["emitted"] - 1,
-                         e["budget"] - e["emitted"] + 1)), None)
+                    (j for j in scan
+                     if retry_q[j]["ready_at"] <= t and pool.can_admit(
+                         len(by_rid[retry_q[j]["rid"]].prompt)
+                         + retry_q[j]["emitted"] - 1,
+                         retry_q[j]["budget"] - retry_q[j]["emitted"] + 1)),
+                    None)
                 if idx is None:
                     break
-                admit_retry(retry_q.pop(idx))
+                e = retry_q.pop(idx)
+                try:
+                    admit_retry(e)
+                except PageExhausted:
+                    # evictable estimate went stale: wait for pages
+                    retry_q.insert(0, e)
+                    break
                 ingest()
+
+            if self.preempter is not None:
+                # SLO tiers: latency-tier arrivals go first, and a latency
+                # head that cannot admit may preempt batch-tier slots
+                # instead of queueing behind them
+                promote_latency()
+                if ready and tiers[ready[0].rid] == "latency":
+                    head = ready[0]
+                    while (not pool.can_admit(len(head.prompt),
+                                              head.new_tokens,
+                                              shared_len=self._prefix_len(head))):
+                        cands = victim_candidates(tier_only="batch")
+                        if not cands:
+                            break
+                        preempt_slot(self.preempter.rank(cands)[0]["slot"])
 
             if self.prefill_chunk is None or chunk_disabled:
                 # BLOCKING admissions: fill free slots from the ready queue;
@@ -684,12 +950,20 @@ class ContinuousBatchingScheduler:
                     slot = pool.next_free()
                     tp = self.cal.prefill_s(1, len(r.prompt))
                     if self.execute:
-                        first = self.engine.prefill_into_slot(
-                            pool, slot, r.prompt, rid=r.rid, budget=r.new_tokens)
+                        try:
+                            first = self.engine.prefill_into_slot(
+                                pool, slot, r.prompt, rid=r.rid,
+                                budget=r.new_tokens)
+                        except PageExhausted:
+                            # can_admit's evictable estimate went stale mid-
+                            # scan; the pool unwound cleanly — wait for pages
+                            ready.appendleft(r)
+                            break
                     else:
                         first = 0
                         pool.admit_virtual(slot, rid=r.rid, pos=len(r.prompt),
                                            budget=r.new_tokens)
+                    pool.slots[slot].tier = tiers[r.rid]
                     rec.admit_s = t
                     t += tp
                     self.policy.on_busy("prefill", tp)
@@ -723,6 +997,7 @@ class ContinuousBatchingScheduler:
                     slot = pool.next_free()
                     pool.reserve(slot, rid=r.rid, s0=len(r.prompt),
                                  budget=r.new_tokens, shared_len=m0)
+                    pool.slots[slot].tier = tiers[r.rid]
                     g.append(r)
                     slots.append(slot)
                     recs[r.rid].admit_s = t
@@ -789,7 +1064,25 @@ class ContinuousBatchingScheduler:
                         group.pos += ttok
                     if group.done:
                         if self.execute:
-                            first = self.engine.finish_chunked_prefill(pool, group)
+                            try:
+                                first = self.engine.finish_chunked_prefill(
+                                    pool, group)
+                            except PageExhausted:
+                                # the group's delta blocks cannot land (the
+                                # atomic pre-check caught it before touching
+                                # any slot): DEGRADE to blocking admission,
+                                # exactly like a chunk-fault budget blowout
+                                degraded += 1
+                                chunk_disabled = True
+                                for rid in group.rids:
+                                    recs[rid].waste_j += group_spent_ok / k
+                                self.engine.cancel_chunked_prefill(pool, group)
+                                self.admitted -= k
+                                for r in reversed(
+                                        [by_rid[rid] for rid in group.rids]):
+                                    ready.appendleft(r)
+                                group = None
+                                continue
                         else:
                             first = np.zeros(k, np.int32)
                             for j, slot in enumerate(group.slots):
@@ -799,6 +1092,7 @@ class ContinuousBatchingScheduler:
                                               first_tok=0)
                         for j, rid in enumerate(group.rids):
                             rec = recs[rid]
+                            pool.slots[group.slots[j]].tier = tiers[rid]
                             rec.tokens.append(int(first[j]))
                             if self.drafter is not None:
                                 self.drafter.begin(
@@ -829,7 +1123,22 @@ class ContinuousBatchingScheduler:
                 else:
                     spec_k = self.speculate_k
 
-            if spec_k:
+            if paged and decoding:
+                # MEMORY PRESSURE phase: the page-pressure fault may pin
+                # free pages out for this tick, then the watermark preempts
+                # victims until the tick's worst-case growth fits
+                if inj is not None:
+                    stolen = inj.press()
+                    if stolen:
+                        press_pins = pool.pin_free_pages(stolen)
+                if force_plain:
+                    spec_k = 0  # one-shot: retry the failed tick unspeculated
+                if self.preempter is not None:
+                    relieve_pressure(spec_k + 1)
+                    decoding = pool.decoding_slots()
+            force_plain = False
+
+            if spec_k and decoding:
                 # SPECULATIVE DECODING: draft K candidates per decoding slot
                 # (admitting slots stay out of the verify mask), score every
                 # slot's K+1 window in ONE verify pass, commit the accepted
@@ -845,8 +1154,22 @@ class ContinuousBatchingScheduler:
                     drafts[slot] = self.drafter.propose(
                         pool.slots[slot].rid)[:spec_k]
                 if self.execute:
-                    toks, acc, fin = self.engine.masked_speculative_step(
-                        pool, drafts)
+                    try:
+                        toks, acc, fin = self.engine.masked_speculative_step(
+                            pool, drafts)
+                    except PageExhausted:
+                        # verify tail blocks outran the pool mid-tick (the
+                        # crash-era RuntimeError path): preempt one victim,
+                        # retry the tick as plain decode (within-reservation
+                        # demand, always satisfiable after the preempt)
+                        if not emergency_preempt():
+                            tq = [s for s in pool.decoding_slots()
+                                  if s in pool._slot_tainted]
+                            if tq:
+                                quarantine(tq[0])
+                        force_plain = True
+                        release_press()
+                        continue
                 else:  # the virtual model's greedy chain is all zeros
                     toks = np.zeros((pool.max_batch, spec_k + 1), np.int32)
                     acc = np.cumprod(drafts == 0, axis=1).sum(axis=1)
@@ -900,7 +1223,16 @@ class ContinuousBatchingScheduler:
                 ts = self.cal.step_s() * stall
                 util = len(decoding) / pool.max_batch
                 if self.execute:
-                    nxt, fin = self.engine.masked_decode_step(pool)
+                    try:
+                        nxt, fin = self.engine.masked_decode_step(pool)
+                    except PageExhausted:
+                        if not emergency_preempt():
+                            tq = [s for s in pool.decoding_slots()
+                                  if s in pool._slot_tainted]
+                            if tq:
+                                quarantine(tq[0])
+                        release_press()
+                        continue
                 else:
                     nxt = np.zeros(pool.max_batch, np.int32)
                     fin = np.ones(pool.max_batch, bool)
@@ -926,6 +1258,8 @@ class ContinuousBatchingScheduler:
                         self.drafter.observe(info.rid, [tok])
                     self._maybe_finish(slot, rec, t, deadlines[info.rid])
                 progressed = True
+
+            release_press()
 
             if not progressed and group is None and (i < n or retry_q):
                 # IDLE/OFF: pool drained — the online policy owns the gap up
@@ -973,7 +1307,11 @@ class ContinuousBatchingScheduler:
                            throttled_ticks=throttled, wasted_energy_j=wasted,
                            peak_active=peak_active,
                            shared_hit_pages=getattr(pool, "shared_hit_pages", 0),
-                           cow_copies=getattr(pool, "cow_copies", 0))
+                           cow_copies=getattr(pool, "cow_copies", 0),
+                           evictions=getattr(pool, "evictions", 0),
+                           preempted=preempted, swapped=swapped,
+                           recomputed=recomputed,
+                           preempt_wasted_j=preempt_waste)
 
 
 # ---------------------------------------------------------------------------

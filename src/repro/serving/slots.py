@@ -88,6 +88,7 @@ class SlotInfo:
     pos: int = 0      # next cache position to write (== tokens resident)
     budget: int = 0   # total new tokens this request will emit
     emitted: int = 0  # tokens emitted so far (prefill's argmax counts as #1)
+    tier: str = "batch"  # SLO tier: "latency" may preempt "batch" slots
 
 
 class SlotPool:

@@ -80,6 +80,39 @@ def test_make_profile_names_and_kv_spec():
         make_profile("bogus=1")
 
 
+def test_make_profile_parses_page_pressure():
+    p = make_profile("press=0.2,pressn=3", seed=2)
+    assert p == FaultProfile(seed=2, press_rate=0.2, press_pages=3)
+    assert p.enabled  # the press axis alone makes the profile active
+    assert isinstance(p.press_pages, int)
+    # press-free profiles stay disabled and keep returning None
+    assert make_profile("none") is None
+
+
+def test_press_draws_only_when_enabled():
+    """The press axis must not consume RNG draws when off — enabling it
+    cannot perturb the nan/stall/chunk sequences of historical profiles."""
+    base = FaultProfile(seed=11, nan_rate=0.3, stall_rate=0.3)
+
+    def drive(inj, with_press):
+        out = []
+        for _ in range(40):
+            if with_press:
+                inj.press()
+            out.append((tuple(inj.poison_victims([0, 1])), inj.stall()))
+        return out
+
+    assert (drive(FaultInjector(base), with_press=True)
+            == drive(FaultInjector(base), with_press=False))
+
+    pressed = dataclasses.replace(base, press_rate=0.5, press_pages=2)
+    inj_a, inj_b = FaultInjector(pressed), FaultInjector(pressed)
+    seq = [inj_a.press() for _ in range(60)]
+    assert seq == [inj_b.press() for _ in range(60)]  # seeded-deterministic
+    assert set(seq) == {0, 2}  # events pin exactly press_pages pages
+    assert inj_a.events == sum(1 for s in seq if s)
+
+
 def test_injector_deterministic_and_budget_capped():
     prof = FaultProfile(seed=5, nan_rate=0.3, stall_rate=0.3,
                         chunk_fault_rate=0.3, max_faults=6)

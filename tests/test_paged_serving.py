@@ -14,7 +14,7 @@ from repro.serving.engine import InferenceEngine, ServeConfig
 from repro.serving.faults import FaultProfile
 from repro.serving.load import bursty_stream, shared_prefix_stream
 from repro.serving.pages import PagedSlotPool
-from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.scheduler import ContinuousBatchingScheduler, FixedCalibration
 
 FAMILY_ARCHS = ("granite-3-8b", "deepseek-v3-671b", "mamba2-780m",
                 "zamba2-7b", "whisper-tiny")
@@ -106,7 +106,13 @@ def test_paged_fault_quarantine_identical(speculate_k):
     faults = FaultProfile(seed=7, nan_rate=0.08, stall_rate=0.1,
                           stall_factor=3.0, chunk_fault_rate=0.2)
     reqs = _stream(contig, n=8, new_tokens=(2, 6))
-    kw = dict(policy="adaptive", faults=faults, speculate_k=speculate_k)
+    # a FIXED calibration, not measured: the per-tick fault draws must land
+    # on the SAME virtual-time tick sequence in both pools, or the
+    # quarantine counts drift apart run to run with measured step times
+    cal = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                           prefill_per_tok_s=0.001, verify_per_tok_s=0.0001)
+    kw = dict(policy="adaptive", faults=faults, speculate_k=speculate_k,
+              calibration=cal)
     base = ContinuousBatchingScheduler(contig, **kw).run(reqs)
     sched = ContinuousBatchingScheduler(paged, **kw)
     rep = sched.run(reqs)

@@ -1,8 +1,10 @@
 """Property-style tests of the paged KV-cache allocator (serving/pages.py):
 refcount conservation, no leak / no double-free, copy-on-write never writes
 a shared page in place, prefix-registry LRU eviction, NaN-taint scrubbing,
-and byte accounting. Runs under hypothesis when available; otherwise the
-same properties are driven by seeded random interleavings."""
+typed exhaustion (PageExhausted with a clean unwind, never RuntimeError),
+swap-out/swap-in bit-identity, page-pressure pins, and byte accounting.
+Runs under hypothesis when available; otherwise the same properties are
+driven by seeded random interleavings."""
 import collections
 import dataclasses
 
@@ -13,7 +15,7 @@ import pytest
 
 from repro.configs import get_reduced_config
 from repro.serving.kv_cache import cache_defs, paged_cache_bytes, paged_keys
-from repro.serving.pages import SCRATCH, PagePool, PagedSlotPool
+from repro.serving.pages import SCRATCH, PageExhausted, PagePool, PagedSlotPool
 
 try:
     from hypothesis import given, strategies as st
@@ -271,39 +273,67 @@ def test_poison_taints_and_scrubs_on_reuse():
 
 
 def _random_lifecycle(seed):
-    """Random interleavings of admit/fork/write/poison/retire hold the
-    refcount-conservation invariant after EVERY operation."""
+    """Random interleavings of admit/fork/write/poison/retire — plus the
+    preemption actions swap/unswap and the page-pressure pin/unpin — hold
+    the refcount-conservation invariant after EVERY operation."""
     cfg = _cfg()
     pool = PagedSlotPool(cfg, max_batch=3, max_len=16, page_size=4,
                          share_prefix=True)
     rng = np.random.default_rng(seed)
-    for _ in range(30):
+    images: list[dict] = []
+    pins: list[int] = []
+    for _ in range(40):
         free = [s for s in range(3) if not pool.active[s]]
         live = [s for s in range(3) if pool.active[s]]
-        op = rng.choice(["admit", "fork", "write", "poison", "retire"])
+        clean = [s for s in live if s not in pool._slot_tainted]
+        op = rng.choice(["admit", "fork", "write", "poison", "retire",
+                         "swap", "unswap", "press", "release"])
         if op == "admit" and free:
             pos = int(rng.integers(2, 13))
             prompt = rng.integers(0, 64, pos).astype(np.int32)
             if pool.can_admit(pos, 3):
-                pool.admit(free[0], _req_cache(cfg, pos, seed=int(rng.integers(99))),
-                           rid=int(rng.integers(1 << 20)), pos=pos, budget=3,
-                           first_tok=1, prompt=prompt)
+                try:
+                    pool.admit(free[0],
+                               _req_cache(cfg, pos, seed=int(rng.integers(99))),
+                               rid=int(rng.integers(1 << 20)), pos=pos,
+                               budget=3, first_tok=1, prompt=prompt)
+                except PageExhausted:
+                    pass  # press pins may beat the estimate; unwound cleanly
         elif op == "fork" and free and live:
             pool.fork_slot(live[0], free[0], rid=int(rng.integers(1 << 20)))
         elif op == "write" and live:
             s = live[int(rng.integers(len(live)))]
             p = pool.slots[s].pos
-            pool.ensure_writable(s, p, p + 1)
+            try:
+                pool.ensure_writable(s, p, p + 1)
+            except PageExhausted:
+                pass
         elif op == "poison" and live:
             pool.poison(live[int(rng.integers(len(live)))])
         elif op == "retire" and live:
             pool.retire(live[int(rng.integers(len(live)))])
+        elif op == "swap" and clean:
+            images.append(pool.swap_out(clean[int(rng.integers(len(clean)))]))
+        elif op == "unswap" and images and free:
+            img = images.pop()
+            try:
+                pool.swap_in(free[0], img)
+            except PageExhausted:
+                images.append(img)  # pool too tight right now; keep the image
+        elif op == "press":
+            pins.extend(pool.pin_free_pages(int(rng.integers(1, 3))))
+        elif op == "release" and pins:
+            pool.unpin_pages(pins)
+            pins = []
         pool.check_invariants()
+    if pins:
+        pool.unpin_pages(pins)
     for s in range(3):
         if pool.active[s]:
             pool.retire(s)
     pool.check_invariants()
-    # no leak: every non-registry page is back on the free list
+    # no leak: every non-registry page is back on the free list (dropped
+    # swap images are host-side buffers — their pages were freed at swap_out)
     assert pool.pages.free_count == pool.num_pages - 1 - len(pool._prefix)
 
 
@@ -315,6 +345,121 @@ else:
     @pytest.mark.parametrize("seed", range(4))
     def test_random_lifecycle_interleavings(seed):
         _random_lifecycle(seed)
+
+
+# ---------------------------------------------------------------------------
+# Typed exhaustion, swap roundtrip, page-pressure pins
+# ---------------------------------------------------------------------------
+def test_exhaustion_is_typed_and_unwinds_admit():
+    """Allocation failure raises PageExhausted (the crash-era RuntimeError is
+    gone) and admit unwinds completely: the slot is free again, no page
+    leaked, and a smaller admission still succeeds."""
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         num_pages=4)  # 3 allocatable pages
+    free_before = pool.pages.free_count
+    with pytest.raises(PageExhausted) as ei:
+        pool.admit(0, _req_cache(cfg, 14), rid=0, pos=14, budget=1,
+                   first_tok=1)  # needs 4 blocks > 3 pages
+    assert not isinstance(ei.value, RuntimeError)
+    assert ei.value.need >= 1
+    pool.check_invariants()
+    assert pool.pages.free_count == free_before
+    assert not pool.active[0] and pool.free_count == 2
+    pool.admit(0, _req_cache(cfg, 8), rid=1, pos=8, budget=2, first_tok=1)
+    pool.check_invariants()
+
+
+def test_exhaustion_is_typed_in_ensure_writable():
+    """Mid-decode growth past the pool raises PageExhausted with committed
+    COW work flushed and invariants intact — the watermark's blocks_needed
+    must agree with what ensure_writable would actually allocate."""
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         num_pages=4)
+    pool.admit(0, _req_cache(cfg, 8), rid=0, pos=8, budget=8, first_tok=1)
+    pins = pool.pin_free_pages(pool.pages.free_count)  # drain the free list
+    assert pool.blocks_needed(0, 8, 9) == 1  # next block is unmapped
+    with pytest.raises(PageExhausted):
+        pool.ensure_writable(0, 8, 9)
+    pool.check_invariants()
+    pool.unpin_pages(pins)
+    pool.ensure_writable(0, 8, 9)  # pressure gone: the same write now fits
+    assert pool.blocks_needed(0, 8, 9) == 0
+    pool.check_invariants()
+
+
+def test_swap_roundtrip_is_bit_identical():
+    """swap_out → swap_in restores the slot byte-for-byte: every cache row
+    addressed through the table, the unpaged per-slot rows, and the slot
+    bookkeeping (rid/pos/budget/emitted/tier/next token)."""
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4)
+    pool.admit(0, _req_cache(cfg, 10), rid=7, pos=10, budget=5, first_tok=3)
+    pool.slots[0].tier = "latency"
+    pool.advance(0, 2, next_tok=9)  # mid-decode state: pos=12, emitted=3
+
+    def snapshot(slot):
+        nb = pool._blocks_for(pool.slots[slot].pos)
+        paged = {k: np.concatenate(
+            [_page(pool, pool.table[slot, b], k) for b in range(nb)], axis=1)
+            for k in paged_keys(cfg)}
+        rows = {k: np.asarray(v)[:, slot] for k, v in pool.cache.items()
+                if k not in pool._pkeys}
+        return paged, rows
+
+    want_pages, want_rows = snapshot(0)
+    est = pool.swap_image_bytes(0)  # the cost model's pre-swap estimate
+    image = pool.swap_out(0)
+    pool.check_invariants()
+    assert not pool.active[0] and pool.swap_outs == 1
+    assert image["bytes"] == est > 0
+
+    pool.swap_in(1, image)  # a DIFFERENT slot: the mapping is logical
+    pool.check_invariants()
+    got_pages, got_rows = snapshot(1)
+    for k in want_pages:
+        np.testing.assert_array_equal(got_pages[k], want_pages[k])
+    for k in want_rows:
+        np.testing.assert_array_equal(got_rows[k], want_rows[k])
+    info = pool.slots[1]
+    assert (info.rid, info.pos, info.budget, info.emitted, info.tier) == \
+        (7, 12, 5, 3, "latency")
+    assert int(pool.tok[1]) == 9 and pool.swap_ins == 1
+
+
+def test_swap_in_unwinds_on_exhaustion():
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         num_pages=6)
+    pool.admit(0, _req_cache(cfg, 10), rid=0, pos=10, budget=2, first_tok=1)
+    image = pool.swap_out(0)
+    pins = pool.pin_free_pages(pool.pages.free_count)
+    with pytest.raises(PageExhausted):
+        pool.swap_in(0, image)
+    pool.check_invariants()
+    assert not pool.active[0] and pool.free_count == 2
+    pool.unpin_pages(pins)
+    pool.swap_in(0, image)  # the image survives a failed restore attempt
+    assert pool.slots[0].rid == 0 and pool.slots[0].pos == 10
+    pool.check_invariants()
+
+
+def test_press_pins_shrink_and_restore_the_pool():
+    cfg = _cfg()
+    pool = PagedSlotPool(cfg, max_batch=2, max_len=16, page_size=4,
+                         num_pages=6)
+    before = pool.pages.free_count
+    pins = pool.pin_free_pages(2)
+    assert len(pins) == 2 and pool.pages.free_count == before - 2
+    pool.check_invariants()
+    more = pool.pin_free_pages(before)  # over-ask pins only what exists
+    assert len(more) == before - 2 and pool.pages.free_count == 0
+    pool.check_invariants()
+    pool.unpin_pages(pins)
+    pool.unpin_pages(more)
+    assert pool.pages.free_count == before
+    pool.check_invariants()
 
 
 # ---------------------------------------------------------------------------
