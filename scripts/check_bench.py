@@ -45,6 +45,23 @@ claims as floors:
     latency_tier_p99_gain       latency-tier p99 with tier-aware
                                 preemption vs tierless            >= 1.0
 
+  serve_quantized (DETERMINISTIC — same fixed cost model):
+    quant_capacity_multiplier   peak concurrent requests at a FIXED HBM
+                                byte budget, int8 KV pages vs f32 KV
+                                pages (both paged, same slot count) >= 2.0
+    quant_items_per_j_gain      int8 pool items/J vs the f32 paged
+                                pool on the same burst              >= 1.0
+    quant_min_argmax_agreement  minimum per-family greedy-chain argmax
+                                agreement, fully int8 engine vs f32
+                                (chains diverge permanently at the
+                                first flipped near-tie, and reduced
+                                random-init logits are near-ties
+                                everywhere — the floor is a smoke
+                                bound, not a quality claim; see
+                                docs/kernels.md)                    >= 0.3
+    quant_mean_argmax_agreement mean of the same over the five
+                                families                            >= 0.6
+
   paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
   so the floor is a catastrophic-regression guard, not the real margin; the
   committed full-run artifacts hold the true speedups):
@@ -88,6 +105,12 @@ MEMORY_PRESSURE_CHECKS = (
     ("memory_pressure_goodput_per_j_gain", 1.0),
     ("latency_tier_p99_gain", 1.0),
 )
+QUANT_CHECKS = (
+    ("quant_capacity_multiplier", 2.0),
+    ("quant_items_per_j_gain", 1.0),
+    ("quant_min_argmax_agreement", 0.3),
+    ("quant_mean_argmax_agreement", 0.6),
+)
 LSTM_CHECKS = (
     ("tpu_seq_speedup", 1.0),
     ("tpu_q8_speedup", 1.0),
@@ -99,6 +122,7 @@ CHECKS = {
     "serve_paged_capacity": ("tol", PAGED_CHECKS),
     "serve_shared_prefix": ("tol", SHARED_CHECKS),
     "serve_memory_pressure": ("tol", MEMORY_PRESSURE_CHECKS),
+    "serve_quantized": ("tol", QUANT_CHECKS),
     "paper_lstm_C1_C2": ("tol_lstm", LSTM_CHECKS),
 }
 

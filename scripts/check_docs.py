@@ -1,0 +1,41 @@
+"""Docs sanity gate: every relative link in README.md/docs/*.md must resolve
+to a real file (anchors stripped), and every ``ServeConfig`` field name must
+appear in docs/serving.md so the config reference cannot rot silently."""
+from __future__ import annotations
+
+import dataclasses
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)#]+)(?:#[^)]*)?\)")
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.serving.engine import ServeConfig
+
+    failures = []
+    pages = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    for page in pages:
+        for target in LINK.findall(page.read_text()):
+            if "://" in target:  # external URL — not checked
+                continue
+            if not (page.parent / target).exists():
+                failures.append(f"{page.relative_to(ROOT)}: broken link -> {target}")
+
+    serving = (ROOT / "docs" / "serving.md").read_text()
+    for field in dataclasses.fields(ServeConfig):
+        if f"`{field.name}`" not in serving:
+            failures.append(f"docs/serving.md: ServeConfig field `{field.name}` undocumented")
+
+    for f in failures:
+        print(f"FAIL {f}")
+    print(f"check_docs: {len(pages)} pages, "
+          f"{'%d problem(s)' % len(failures) if failures else 'ok'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

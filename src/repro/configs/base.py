@@ -103,6 +103,11 @@ class ArchConfig:
     scan_layers: bool = True
     cache_update: str = "dus"  # dus | onehot (sharded-seq-safe decode write)
     kv_dtype: Any = None  # None → dtype; jnp.float8_e4m3fn halves KV reads
+    # "int8" routes attention/MLP projection einsums through the
+    # per-output-channel int8 matmul path (models/quant.py): weights are
+    # quantized once at engine init, activations per row at each call.
+    # None = full-precision weights. Serving/inference only.
+    quant: str | None = None
 
     # -- derived -----------------------------------------------------------
     @property

@@ -81,6 +81,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 
@@ -185,6 +186,17 @@ def main(argv=None) -> int:
                     default=False,
                     help="copy-on-write shared-prefix reuse across requests "
                          "(with --paged; attention families only)")
+    ap.add_argument("--quant-weights", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="int8 weight residency: quantize every attention/MLP "
+                         "projection to per-output-column int8 at engine init "
+                         "(models/quant.py; output is argmax-agreement close "
+                         "to f32, not token-identical)")
+    ap.add_argument("--quant-kv", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="int8 KV pages: quantize-on-write, dequantize-in-"
+                         "gather with per-(page,row,head) f32 scales — ~4x "
+                         "less paged-cache HBM (with --paged)")
     ap.add_argument("--page-budget", type=int, default=0,
                     help="physical page count for the paged pool (0 = size "
                          "for contiguous parity); small budgets over-commit "
@@ -219,8 +231,12 @@ def main(argv=None) -> int:
         ap.error("--preempt-policy requires --paged")
     if args.page_budget and not args.paged:
         ap.error("--page-budget requires --paged")
+    if args.quant_kv and not args.paged:
+        ap.error("--quant-kv requires --paged")
 
     cfg = get_reduced_config(args.arch)
+    if args.quant_weights:
+        cfg = dataclasses.replace(cfg, quant="int8")
     # paged pools need no spec_slack spare rows: verify-window tail blocks
     # are allocated on demand out of the page pool
     slack = (args.speculate_k
@@ -232,7 +248,9 @@ def main(argv=None) -> int:
                                                  paged=args.paged,
                                                  page_size=args.page_size,
                                                  num_pages=args.page_budget or None,
-                                                 share_prefix=args.share_prefix))
+                                                 share_prefix=args.share_prefix,
+                                                 kv_quant="int8" if args.quant_kv
+                                                 else None))
 
     if args.mode == "strategies":
         server = WorkloadAwareServer(engine, chips=args.chips)
@@ -316,7 +334,8 @@ def main(argv=None) -> int:
         paged_b = paged_cache_bytes(cfg, batch=args.batch,
                                     num_pages=pool.num_pages,
                                     page_size=pool.page,
-                                    max_blocks=pool.max_blocks)
+                                    max_blocks=pool.max_blocks,
+                                    kv_quant=pool.kv_quant)
         print(f"  KV-cache HBM at parity sizing: contiguous "
               f"{contig_b / 1e6:.3f} MB vs paged {paged_b / 1e6:.3f} MB "
               f"({pool.num_pages} pages of {pool.page} rows); "

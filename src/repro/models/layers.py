@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamDef
+from repro.models.quant import qeinsum
 from repro.sharding.rules import constrain
 
 NEG_INF = -1e30
@@ -209,9 +210,9 @@ def gqa_defs(cfg: ArchConfig, *, cross: bool = False) -> dict:
 
 
 def gqa_project_qkv(params, x, cfg: ArchConfig, positions, *, rope: bool = True):
-    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
-    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    q = qeinsum("bsd,dhe->bshe", x, params["wq"])
+    k = qeinsum("bsd,dhe->bshe", x, params["wk"])
+    v = qeinsum("bsd,dhe->bshe", x, params["wv"])
     if cfg.qkv_bias:
         q = q + params["bq"]
         k = k + params["bk"]
@@ -231,19 +232,19 @@ def gqa_apply(params, x, cfg: ArchConfig, *, causal: bool = True, rope: bool = T
     q, k, v = gqa_project_qkv(params, x, cfg, positions, rope=rope)
     out = run_attention(cfg, q, k, v, causal=causal)
     out = constrain(out, ("batch", None, "heads", None))
-    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return qeinsum("bshe,hed->bsd", out, params["wo"])
 
 
 def gqa_cross_apply(params, x, kv_pair, cfg: ArchConfig):
     """Cross-attention (whisper decoder): kv_pair = (k, v) precomputed."""
     positions = jnp.arange(x.shape[1])[None, :]
-    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q = qeinsum("bsd,dhe->bshe", x, params["wq"])
     if cfg.qkv_bias:
         q = q + params["bq"]
     q = constrain(q, ("batch", None, "heads", None))
     k, v = kv_pair
     out = run_attention(cfg, q, k, v, causal=False)
-    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return qeinsum("bshe,hed->bsd", out, params["wo"])
 
 
 def write_cache(cache, new, pos, cfg: ArchConfig, axis: int = 1):
@@ -316,7 +317,7 @@ def gqa_chunk_apply(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *, rope: 
     k_cache = write_cache_span(cache_k, k_new, pos)
     v_cache = write_cache_span(cache_v, v_new, pos)
     out = attention_chunk(q, k_cache, v_cache, pos)
-    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), k_cache, v_cache
+    return qeinsum("bshe,hed->bsd", out, params["wo"]), k_cache, v_cache
 
 
 def gqa_decode_apply(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *, rope: bool = True):
@@ -339,7 +340,7 @@ def gqa_decode_apply(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *, rope:
     k_cache = write_cache(cache_k, k_new, pos, cfg)
     v_cache = write_cache(cache_v, v_new, pos, cfg)
     out = attention_decode(q, k_cache, v_cache, pos)
-    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    out = qeinsum("bshe,hed->bsd", out, params["wo"])
     return out, k_cache, v_cache
 
 
@@ -364,9 +365,9 @@ def mla_defs(cfg: ArchConfig) -> dict:
 
 def _mla_q(params, x, cfg, positions):
     m = cfg.mla
-    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    cq = qeinsum("bsd,dr->bsr", x, params["wq_a"])
     cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
-    q = jnp.einsum("bsr,rhe->bshe", cq, params["wq_b"])
+    q = qeinsum("bsr,rhe->bshe", cq, params["wq_b"])
     q_nope = q[..., : m.qk_nope_head_dim]
     q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
     return q_nope, q_rope
@@ -374,7 +375,7 @@ def _mla_q(params, x, cfg, positions):
 
 def _mla_ckv(params, x, cfg, positions):
     m = cfg.mla
-    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv = qeinsum("bsd,dr->bsr", x, params["wkv_a"])
     c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
     c = rmsnorm(params["kv_norm"], c, cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
@@ -387,8 +388,8 @@ def mla_apply(params, x, cfg: ArchConfig, *, causal: bool = True):
     positions = jnp.arange(x.shape[1])[None, :]
     q_nope, q_rope = _mla_q(params, x, cfg, positions)
     c, k_rope = _mla_ckv(params, x, cfg, positions)
-    k_nope = jnp.einsum("bsr,rhe->bshe", c, params["wk_b"])
-    v = jnp.einsum("bsr,rhe->bshe", c, params["wv_b"])
+    k_nope = qeinsum("bsr,rhe->bshe", c, params["wk_b"])
+    v = qeinsum("bsr,rhe->bshe", c, params["wv_b"])
     h = cfg.num_heads
     k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], h, m.qk_rope_head_dim))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -399,7 +400,7 @@ def mla_apply(params, x, cfg: ArchConfig, *, causal: bool = True):
     # kv heads == q heads here (decompressed)
     out = run_attention(cfg, q, k, v, causal=causal)
     out = constrain(out, ("batch", None, "heads", None))
-    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return qeinsum("bshe,hed->bsd", out, params["wo"])
 
 
 def mla_decode_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
@@ -423,7 +424,7 @@ def mla_decode_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
     cache_c = write_cache(cache_c, c_new, pos, cfg)
     cache_krope = write_cache(cache_krope, krope_new, pos, cfg)
     # absorb: q_abs (B,1,H,r) = q_nope @ wk_b^T
-    q_abs = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["wk_b"])
+    q_abs = qeinsum("bqhe,rhe->bqhr", q_nope, params["wk_b"])
     s = jnp.einsum("bqhr,bkr->bhqk", q_abs.astype(jnp.float32), cache_c.astype(jnp.float32))
     s = s + jnp.einsum(
         "bqhe,bke->bhqk", q_rope.astype(jnp.float32), cache_krope.astype(jnp.float32)
@@ -435,8 +436,8 @@ def mla_decode_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
     p = constrain(jax.nn.softmax(s, axis=-1), ("batch", None, None, "kv_seq"))
     o_c = jnp.einsum("bhqk,bkr->bqhr", p, cache_c.astype(jnp.float32)).astype(x.dtype)
     o_c = constrain(o_c, ("batch", None, None, None))
-    out = jnp.einsum("bqhr,rhe->bqhe", o_c, params["wv_b"])
-    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    out = qeinsum("bqhr,rhe->bqhe", o_c, params["wv_b"])
+    out = qeinsum("bshe,hed->bsd", out, params["wo"])
     return out, cache_c, cache_krope
 
 
@@ -454,7 +455,7 @@ def mla_chunk_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
     c_new, krope_new = _mla_ckv(params, x, cfg, positions)  # (B,T,r), (B,T,rd)
     cache_c = write_cache_span(cache_c, c_new, pos)
     cache_krope = write_cache_span(cache_krope, krope_new, pos)
-    q_abs = jnp.einsum("bqhe,rhe->bqhr", q_nope, params["wk_b"])
+    q_abs = qeinsum("bqhe,rhe->bqhr", q_nope, params["wk_b"])
     s = jnp.einsum("bqhr,bkr->bhqk", q_abs.astype(jnp.float32), cache_c.astype(jnp.float32))
     s = s + jnp.einsum(
         "bqhe,bke->bhqk", q_rope.astype(jnp.float32), cache_krope.astype(jnp.float32)
@@ -465,8 +466,8 @@ def mla_chunk_apply(params, x, cache_c, cache_krope, pos, cfg: ArchConfig):
     s = jnp.where(valid[None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhqk,bkr->bqhr", p, cache_c.astype(jnp.float32)).astype(x.dtype)
-    out = jnp.einsum("bqhr,rhe->bqhe", o_c, params["wv_b"])
-    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    out = qeinsum("bqhr,rhe->bqhe", o_c, params["wv_b"])
+    out = qeinsum("bshe,hed->bsd", out, params["wo"])
     return out, cache_c, cache_krope
 
 
@@ -494,13 +495,13 @@ def mlp_apply(params, x, cfg: ArchConfig):
 
     act = get_activation(cfg.activation, cfg.activation_impl)
     if "wi" in params:
-        h = jnp.einsum("bsd,df->bsf", x, params["wi"]) + params["bi"].astype(x.dtype)
+        h = qeinsum("bsd,df->bsf", x, params["wi"]) + params["bi"].astype(x.dtype)
         h = constrain(act(h), ("batch", None, "mlp"))
-        return jnp.einsum("bsf,fd->bsd", h, params["wo"]) + params["bo"].astype(x.dtype)
-    g = jnp.einsum("bsd,df->bsf", x, params["wg"])
-    u = jnp.einsum("bsd,df->bsf", x, params["wu"])
+        return qeinsum("bsf,fd->bsd", h, params["wo"]) + params["bo"].astype(x.dtype)
+    g = qeinsum("bsd,df->bsf", x, params["wg"])
+    u = qeinsum("bsd,df->bsf", x, params["wu"])
     h = constrain(act(g) * u, ("batch", None, "mlp"))
-    return jnp.einsum("bsf,fd->bsd", h, params["wd"])
+    return qeinsum("bsf,fd->bsd", h, params["wd"])
 
 
 # ---------------------------------------------------------------------------

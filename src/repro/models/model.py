@@ -38,6 +38,7 @@ from repro.models import transformer as T
 from repro.models import ssm as ssm_mod
 from repro.models.layers import embed_defs, embed_apply, unembed_apply
 from repro.models.params import ParamDef, init_params, stacked
+from repro.models.quant import qeinsum
 from repro.sharding.rules import constrain
 
 ZERO = jnp.zeros((), jnp.float32)
@@ -351,7 +352,7 @@ def prefill(params, tokens, cfg: ArchConfig, frontend_embeds=None):
             return x + y, (tail, h.astype(jnp.float32))
 
         for start, length in _hybrid_segments(cfg):
-            inp = jnp.einsum(
+            inp = qeinsum(
                 "bsd,de->bse", jnp.concatenate([x, x0], axis=-1), params["shared"]["w_in"]
             )
             a, (sk, sv) = T.gqa_full(
@@ -363,7 +364,7 @@ def prefill(params, tokens, cfg: ArchConfig, frontend_embeds=None):
             from repro.models.layers import mlp_apply
 
             y = y + mlp_apply(params["shared"]["mlp"], T.apply_norm(cfg, params["shared"]["ln2"], y), cfg)
-            x = x + jnp.einsum("bse,ed->bsd", y, params["shared"]["w_out"])
+            x = x + qeinsum("bse,ed->bsd", y, params["shared"]["w_out"])
             sks.append(sk)
             svs.append(sv)
             seg = _stack_slice(params["blocks"], start, length)

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamDef
+from repro.models.quant import qeinsum
 from repro.sharding.compat import shard_map
 from repro.sharding.rules import active_mesh, batch_axes
 
@@ -79,9 +80,9 @@ def _expert_ffn(wg, wu, wd, x, cfg: ArchConfig):
     from repro.models.activations import get_activation
 
     act = get_activation(cfg.activation, cfg.activation_impl)
-    g = jnp.einsum("ecd,edf->ecf", x, wg)
-    u = jnp.einsum("ecd,edf->ecf", x, wu)
-    return jnp.einsum("ecf,efd->ecd", act(g) * u, wd)
+    g = qeinsum("ecd,edf->ecf", x, wg)
+    u = qeinsum("ecd,edf->ecf", x, wu)
+    return qeinsum("ecf,efd->ecd", act(g) * u, wd)
 
 
 def _shared_ffn(shared, x, cfg: ArchConfig):
@@ -89,9 +90,9 @@ def _shared_ffn(shared, x, cfg: ArchConfig):
     from repro.models.activations import get_activation
 
     act = get_activation(cfg.activation, cfg.activation_impl)
-    g = jnp.einsum("bsd,df->bsf", x, shared["wg"])
-    u = jnp.einsum("bsd,df->bsf", x, shared["wu"])
-    return jnp.einsum("bsf,fd->bsd", act(g) * u, shared["wd"])
+    g = qeinsum("bsd,df->bsf", x, shared["wg"])
+    u = qeinsum("bsd,df->bsf", x, shared["wu"])
+    return qeinsum("bsf,fd->bsd", act(g) * u, shared["wd"])
 
 
 def _aux_loss(probs, ids, cfg: ArchConfig):

@@ -1,0 +1,167 @@
+"""Int8 weight residency for the serving path (the transformer-side
+counterpart of ``kernels.lstm_quant``).
+
+Conventions are shared with the LSTM path by construction — both call
+``kernels.ref.quantize_colwise``: symmetric per-output-column f32 scales,
+``scale = max(|w|, 1e-8) / 127``, dequantized in the f32 epilogue after the
+int8 matmul (column scales commute with the contraction). A projection
+weight is quantized ONCE at engine init into a :class:`QuantTensor`; each
+``qeinsum`` call quantizes its activations per row (``quantize_rowwise``)
+and contracts int8×int8 with int32 accumulation, so the Pallas
+``kernels.int8_matmul`` kernel and the jnp reference path are bit-identical.
+
+Routing: every attention/MLP projection einsum in models/ goes through
+``qeinsum(spec, x, w)``. With a plain array ``w`` it is exactly
+``jnp.einsum`` — training and full-precision serving are untouched; with a
+``QuantTensor`` it takes the int8 path. Specs whose weight layout does not
+collapse to a (K, N) matmul against per-column scales (MLA's absorbed
+decode, which contracts ``wk_b``/``wv_b`` over non-leading axes) fall back
+to dequantize-then-einsum — numerically the same weights, no int8 compute.
+
+What gets quantized (``quantize_params`` key allowlist): attention
+projections (wq/wk/wv/wo, MLA wq_a/wq_b/wkv_a/wk_b/wv_b), MLP and MoE
+expert/shared projections (wi/wg/wu/wd), Mamba input/output projections
+(wz/wx/wo), and the hybrid shared-attention adapters (w_in/w_out). Routers,
+biases, norms, embeddings, convs, and SSM dynamics (wB/wC/wdt) stay f32 —
+they are tiny, accuracy-critical, or both.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import int8_matmul_ref, quantize_colwise, quantize_rowwise
+from repro.kernels.runtime import default_interpret
+
+QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention projections
+    "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",     # MLA low-rank projections
+    "wi", "wg", "wu", "wd",                      # MLP / MoE expert + shared
+    "wz", "wx",                                  # mamba input projections
+    "w_in", "w_out",                             # hybrid shared-attn adapters
+})
+
+# leading ParamDef logical axes that are stack/batch axes, not contraction
+# axes: "layers" (scan stacking) and "experts" (MoE expert axis — a batch
+# label in the expert einsums)
+_LEAD_AXES = ("layers", "experts")
+
+
+class QuantTensor(NamedTuple):
+    """One quantized weight: int8 payload in the ORIGINAL layout + f32
+    scales over the output axes (leading stack axes kept, contraction axes
+    removed). A NamedTuple is a pytree, so layer slicing (``_layer`` /
+    ``lax.scan`` over stacked params) slices payload and scales together.
+    """
+
+    q: jax.Array      # int8, same shape as the source weight
+    scale: jax.Array  # f32, shape = lead axes + output axes
+
+
+def dequantize(w: QuantTensor) -> jax.Array:
+    """f32 weight the int8 path computes with (scales are over the TRAILING
+    axes for every fallback-eligible layout, so plain broadcasting works)."""
+    assert w.scale.shape == w.q.shape[w.q.ndim - w.scale.ndim:], (
+        w.q.shape, w.scale.shape)
+    return w.q.astype(jnp.float32) * w.scale
+
+
+def _quantize_weight(w, *, lead: int, n_contract: int) -> QuantTensor:
+    """Collapse ``w`` (lead axes + contract axes + output axes, in that
+    order) to 2D per lead index and apply ``quantize_colwise``."""
+    k = math.prod(w.shape[lead : lead + n_contract])
+    n_dims = w.shape[lead + n_contract :]
+    w2 = w.reshape(*w.shape[:lead], k, math.prod(n_dims) if n_dims else 1)
+    fn = quantize_colwise
+    for _ in range(lead):
+        fn = jax.vmap(fn)
+    q2, s2 = fn(w2)
+    return QuantTensor(q=q2.reshape(w.shape),
+                       scale=s2.reshape(*w.shape[:lead], *n_dims))
+
+
+def quantize_params(params, cfg):
+    """Quantize every allowlisted projection weight in a model param tree.
+
+    The matching ``ParamDef`` tree supplies the logical axis names, which is
+    how stacked lead axes (layers / experts) are told apart from contraction
+    axes — shapes alone cannot. 3D attention output weights (h, hd, d)
+    contract their first TWO core axes; everything else contracts one.
+    Idempotent: already-quantized leaves pass through.
+    """
+    from repro.models.model import param_defs
+
+    defs = param_defs(cfg)
+
+    def walk(key, p, d):
+        if isinstance(p, dict):
+            return {k: walk(k, v, d[k]) for k, v in p.items()}
+        if key not in QUANT_KEYS or isinstance(p, QuantTensor):
+            return p
+        lead = 0
+        while lead < len(d.logical) and d.logical[lead] in _LEAD_AXES:
+            lead += 1
+        core_nd = p.ndim - lead
+        n_contract = core_nd - 1 if (key == "wo" and core_nd == 3) else 1
+        return _quantize_weight(p, lead=lead, n_contract=n_contract)
+
+    return {k: walk(k, v, defs[k]) for k, v in params.items()}
+
+
+def _use_kernel(m: int, k: int, n: int) -> bool:
+    """Dispatch to the Pallas ``int8_matmul`` kernel only off-interpret and
+    when every dim tiles cleanly (the kernel does not pad); otherwise the
+    jnp int32-accumulating reference runs — numerically identical."""
+    return (not default_interpret()
+            and m % 128 == 0 and k % 128 == 0 and n % 128 == 0)
+
+
+def qeinsum(spec: str, x, w):
+    """``jnp.einsum(spec, x, w)``, int8-aware.
+
+    Plain-array ``w`` → exact einsum passthrough. ``QuantTensor`` ``w`` →
+    row-quantize ``x``, contract int8×int8 with int32 accumulation, apply
+    both scales in the f32 epilogue. Supported fast-path specs look like
+    ``"(b)(xm...)(k...), (b)(k...)(n...) -> (b)(xm...)(n...)"`` with at most
+    one shared batch label ``b`` (vmapped, e.g. the MoE expert axis); other
+    specs dequantize the weight and run the plain einsum.
+    """
+    if not isinstance(w, QuantTensor):
+        return jnp.einsum(spec, x, w)
+    ins, out = spec.replace(" ", "").split("->")
+    s1, s2 = ins.split(",")
+    set1, setout = set(s1), set(out)
+    batch = [l for l in s2 if l in set1 and l in setout]
+    contract = [l for l in s2 if l in set1 and l not in setout]
+    wout = [l for l in s2 if l not in set1]
+    xm = [l for l in s1 if l not in s2]
+    fast = (len(batch) <= 1 and contract
+            and s2 == "".join(batch + contract + wout)
+            and s1 == "".join(batch + xm + contract)
+            and out == "".join(batch + xm + wout))
+    if not fast:
+        return jnp.einsum(spec, x, dequantize(w)).astype(x.dtype)
+    if batch:
+        sub = f"{s1[1:]},{s2[1:]}->{out[1:]}"  # all three start with the label
+        return jax.vmap(
+            lambda xb, qb, sb: qeinsum(sub, xb, QuantTensor(qb, sb))
+        )(x, w.q, w.scale)
+    nm, nk = len(xm), len(contract)
+    xm_shape, n_shape = x.shape[:nm], w.q.shape[nk:]
+    k = math.prod(x.shape[nm:])
+    assert math.prod(w.q.shape[:nk]) == k, (spec, x.shape, w.q.shape)
+    x2 = x.reshape(math.prod(xm_shape) if xm_shape else 1, k)
+    q2 = w.q.reshape(k, -1)
+    s2_ = w.scale.reshape(-1)
+    xq, xs = quantize_rowwise(x2)
+    if _use_kernel(x2.shape[0], k, q2.shape[1]):
+        from repro.kernels.int8_matmul import int8_matmul
+
+        y2 = int8_matmul(xq, q2, xs, s2_,
+                         block_m="auto", block_n="auto", block_k="auto")
+    else:
+        y2 = int8_matmul_ref(xq, q2, xs, s2_)
+    return y2.reshape(*xm_shape, *n_shape).astype(x.dtype)

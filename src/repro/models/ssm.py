@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamDef
+from repro.models.quant import qeinsum
 from repro.models.layers import rmsnorm_defs, rmsnorm
 from repro.sharding.rules import constrain
 
@@ -221,8 +222,8 @@ def ssm_reference(x, dt, A, Bm, Cm, h0=None):
 def _project(params, x, cfg: ArchConfig):
     s = cfg.ssm
     h = s.num_heads(cfg.d_model)
-    z = jnp.einsum("bsd,di->bsi", x, params["wz"])
-    xs = jnp.einsum("bsd,di->bsi", x, params["wx"])
+    z = qeinsum("bsd,di->bsi", x, params["wz"])
+    xs = qeinsum("bsd,di->bsi", x, params["wx"])
     Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"])
     Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"])
     dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
@@ -249,7 +250,7 @@ def mamba_apply(params, x, cfg: ArchConfig):
     y = y.reshape(b, sl, nh * hd).astype(x.dtype)
     y = constrain(y, ("batch", None, "inner"))
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
-    return jnp.einsum("bsi,id->bsd", y, params["wo"])
+    return qeinsum("bsi,id->bsd", y, params["wo"])
 
 
 def mamba_prefill_apply(params, x, cfg: ArchConfig):
@@ -280,7 +281,7 @@ def mamba_prefill_apply(params, x, cfg: ArchConfig):
     y = y + params["D"][None, None, :, None] * xh
     y = y.reshape(b, sl, nh * hd).astype(x.dtype)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
-    return jnp.einsum("bsi,id->bsd", y, params["wo"]), tail, h_final
+    return qeinsum("bsi,id->bsd", y, params["wo"]), tail, h_final
 
 
 def mamba_chunk_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
@@ -319,7 +320,7 @@ def mamba_chunk_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
     y = y + params["D"][None, None, :, None] * xh
     y = y.reshape(b, sl, nh * hd).astype(x.dtype)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
-    return jnp.einsum("bsi,id->bsd", y, params["wo"]), new_conv, h_final.astype(ssm_state.dtype)
+    return qeinsum("bsi,id->bsd", y, params["wo"]), new_conv, h_final.astype(ssm_state.dtype)
 
 
 def mamba_verify_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
@@ -368,7 +369,7 @@ def mamba_verify_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
     y = y + params["D"][None, None, :, None] * xh
     y = y.reshape(b, sl, nh * hd).astype(x.dtype)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
-    return jnp.einsum("bsi,id->bsd", y, params["wo"]), conv_all, h_all.astype(ssm_state.dtype)
+    return qeinsum("bsi,id->bsd", y, params["wo"]), conv_all, h_all.astype(ssm_state.dtype)
 
 
 def mamba_decode_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
@@ -407,7 +408,7 @@ def mamba_decode_apply(params, x, conv_state, ssm_state, cfg: ArchConfig):
     y = y + params["D"][None, :, None] * xh
     y = y.reshape(b, 1, di).astype(x.dtype)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
-    out = jnp.einsum("bsi,id->bsd", y, params["wo"])
+    out = qeinsum("bsi,id->bsd", y, params["wo"])
     return out, new_conv, h_new.astype(ssm_state.dtype)
 
 

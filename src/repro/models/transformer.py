@@ -47,6 +47,7 @@ from repro.models.layers import (
 )
 from repro.models.moe import moe_apply, moe_defs
 from repro.models.params import ParamDef
+from repro.models.quant import qeinsum
 from repro.sharding.rules import constrain
 
 ZERO = jnp.zeros((), jnp.float32)
@@ -90,7 +91,7 @@ def gqa_full(p, x, cfg: ArchConfig, *, causal: bool, rope: bool):
     q, k, v = gqa_project_qkv(p, x, cfg, positions, rope=rope)
     out = run_attention(cfg, q, k, v, causal=causal)
     out = constrain(out, ("batch", None, "heads", None))
-    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
+    return qeinsum("bshe,hed->bsd", out, p["wo"]), (k, v)
 
 
 def dense_block_prefill(p, x, cfg: ArchConfig):
@@ -205,14 +206,14 @@ def _mla_prefill_attn(p, x, cfg: ArchConfig):
     positions = jnp.arange(x.shape[1])[None, :]
     q_nope, q_rope = _mla_q(p, x, cfg, positions)
     c, k_rope = _mla_ckv(p, x, cfg, positions)
-    k_nope = jnp.einsum("bsr,rhe->bshe", c, p["wk_b"])
-    v = jnp.einsum("bsr,rhe->bshe", c, p["wv_b"])
+    k_nope = qeinsum("bsr,rhe->bshe", c, p["wk_b"])
+    v = qeinsum("bsr,rhe->bshe", c, p["wv_b"])
     h = cfg.num_heads
     k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], h, m.qk_rope_head_dim))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
     out = run_attention(cfg, q, k, v, causal=True)
-    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (c, k_rope)
+    return qeinsum("bshe,hed->bsd", out, p["wo"]), (c, k_rope)
 
 
 def mla_dense_block_prefill(p, x, cfg: ArchConfig):
@@ -314,30 +315,30 @@ def shared_attn_defs(cfg: ArchConfig) -> dict:
 
 
 def shared_attn_apply(p, x, x0, cfg: ArchConfig):
-    inp = jnp.einsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
+    inp = qeinsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
     y = inp + gqa_full(p["attn"], apply_norm(cfg, p["ln1"], inp), cfg, causal=True, rope=True)[0]
     y = y + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], y), cfg)
-    return x + jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return x + qeinsum("bse,ed->bsd", y, p["w_out"])
 
 
 def shared_attn_chunk(p, x, x0, k_cache, v_cache, pos, cfg: ArchConfig):
-    inp = jnp.einsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
+    inp = qeinsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
     a, k_cache, v_cache = gqa_chunk_apply(
         p["attn"], apply_norm(cfg, p["ln1"], inp), k_cache, v_cache, pos, cfg
     )
     y = inp + a
     y = y + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], y), cfg)
-    return x + jnp.einsum("bse,ed->bsd", y, p["w_out"]), k_cache, v_cache
+    return x + qeinsum("bse,ed->bsd", y, p["w_out"]), k_cache, v_cache
 
 
 def shared_attn_decode(p, x, x0, k_cache, v_cache, pos, cfg: ArchConfig):
-    inp = jnp.einsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
+    inp = qeinsum("bsd,de->bse", jnp.concatenate([x, x0], axis=-1), p["w_in"])
     a, k_cache, v_cache = gqa_decode_apply(
         p["attn"], apply_norm(cfg, p["ln1"], inp), k_cache, v_cache, pos, cfg
     )
     y = inp + a
     y = y + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], y), cfg)
-    return x + jnp.einsum("bse,ed->bsd", y, p["w_out"]), k_cache, v_cache
+    return x + qeinsum("bse,ed->bsd", y, p["w_out"]), k_cache, v_cache
 
 
 # ---------------------------------------------------------------------------
@@ -370,8 +371,8 @@ def dec_block_defs(cfg: ArchConfig) -> dict:
 
 
 def _cross_kv(p, enc, cfg: ArchConfig):
-    k = jnp.einsum("bsd,dhe->bshe", enc, p["wk"])
-    v = jnp.einsum("bsd,dhe->bshe", enc, p["wv"])
+    k = qeinsum("bsd,dhe->bshe", enc, p["wk"])
+    v = qeinsum("bsd,dhe->bshe", enc, p["wv"])
     if cfg.qkv_bias:
         k = k + p["bk"]
         v = v + p["bv"]
@@ -415,11 +416,11 @@ def dec_block_decode(p, x, cache, pos, cfg: ArchConfig):
     )
     x = x + a
     # cross attention: single query against the (static) encoder K/V
-    q = jnp.einsum("bsd,dhe->bshe", apply_norm(cfg, p["ln_x"], x), p["cross_attn"]["wq"])
+    q = qeinsum("bsd,dhe->bshe", apply_norm(cfg, p["ln_x"], x), p["cross_attn"]["wq"])
     if cfg.qkv_bias:
         q = q + p["cross_attn"]["bq"]
     out = run_attention(cfg, q, ck, cv, causal=False)
-    x = x + jnp.einsum("bshe,hed->bsd", out, p["cross_attn"]["wo"])
+    x = x + qeinsum("bshe,hed->bsd", out, p["cross_attn"]["wo"])
     x = x + mlp_apply(p["mlp"], apply_norm(cfg, p["ln2"], x), cfg)
     return x, (k_cache, v_cache, ck, cv)
 

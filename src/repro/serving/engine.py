@@ -43,7 +43,8 @@ from repro.models.model import (
 )
 from repro.models.params import init_params
 from repro.serving.faults import FaultProfile
-from repro.serving.kv_cache import cache_defs, paged_keys
+from repro.serving.kv_cache import (cache_defs, dequantize_kv, paged_keys,
+                                    quantize_kv)
 from repro.serving.pages import PagedSlotPool
 from repro.serving.slots import SlotPool, grow_cache
 
@@ -89,6 +90,13 @@ class ServeConfig:
     # requests (paged only; common-system-prompt traffic prefills the
     # shared prefix once)
     share_prefix: bool = False
+    # int8 KV page residency (paged only): payloads are stored int8 with
+    # per-row f32 scales in parallel "{key}_scale" page leaves — ~4x less
+    # HBM per page, quantize-on-write in every scatter path and
+    # dequantize-in-gather in every virtual-cache gather. Token identity vs
+    # the f32 path is NOT expected; the acceptance metric is argmax
+    # agreement rate (see docs/kernels.md). "int8" or None.
+    kv_quant: str | None = None
 
 
 class InferenceEngine:
@@ -101,6 +109,12 @@ class InferenceEngine:
         self.params = params if params is not None else init_model(
             cfg, jax.random.PRNGKey(seed)
         )
+        if cfg.quant == "int8":
+            # idempotent: pre-quantized leaves pass through, so callers may
+            # hand in either f32 or already-quantized param trees
+            from repro.models.quant import quantize_params
+
+            self.params = quantize_params(self.params, cfg)
         self._prefill = jax.jit(
             lambda p, toks, fe: prefill(p, toks, cfg, frontend_embeds=fe)
         )
@@ -175,7 +189,8 @@ class InferenceEngine:
                 self.cfg, max_batch=self.sc.max_batch,
                 max_len=self.sc.max_len, page_size=self.sc.page_size,
                 slack=self.sc.spec_slack, num_pages=self.sc.num_pages,
-                share_prefix=self.sc.share_prefix)
+                share_prefix=self.sc.share_prefix, kv_quant=self.sc.kv_quant)
+        assert self.sc.kv_quant is None, "kv_quant requires paged=True"
         return SlotPool(self.cfg, max_batch=self.sc.max_batch,
                         max_len=self.sc.max_len, slack=self.sc.spec_slack)
 
@@ -278,15 +293,28 @@ class InferenceEngine:
         Rows gathered from unmapped blocks (scratch) are garbage, but every
         position > pos is masked to NEG_INF before the softmax, so they are
         exactly inert — the paged step is token-for-token the contiguous
-        step in f32. Inactive slots' writes are redirected to page 0."""
+        step in f32. Inactive slots' writes are redirected to page 0.
+
+        Under ``kv_quant`` the gather also dequantizes (payload pages times
+        their "{key}_scale" pages) and the written block is re-quantized
+        before the scatter; re-quantizing the block's untouched rows is
+        idempotent, so only the freshly written position changes."""
         cfg, page = self.cfg, self.sc.page_size
         pkeys = paged_keys(cfg)
-        paged = {k: cache[k] for k in pkeys}
-        rest = {k: v for k, v in cache.items() if k not in pkeys}
+        quant = self.sc.kv_quant
+        skeys = tuple(f"{k}_scale" for k in pkeys) if quant else ()
+        paged = {k: cache[k] for k in (*pkeys, *skeys)}
+        rest = {k: v for k, v in cache.items() if k not in paged}
         pos = jnp.where(active, pos, 0)
 
         def one(rest_b, tok_b, pos_b, tab_b, act_b):
-            virt = {k: paged_virtual_cache(paged[k], tab_b) for k in pkeys}
+            if quant:
+                virt = {k: dequantize_kv(
+                    paged_virtual_cache(paged[k], tab_b),
+                    paged_virtual_cache(paged[f"{k}_scale"], tab_b))
+                    for k in pkeys}
+            else:
+                virt = {k: paged_virtual_cache(paged[k], tab_b) for k in pkeys}
             c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1),
                               {**rest_b, **virt})
             logits, c1 = decode_step(params, c1, tok_b[None, None], pos_b, cfg)
@@ -295,15 +323,20 @@ class InferenceEngine:
             nxt = jnp.argmax(v).astype(jnp.int32)
             fin = jnp.isfinite(v).all()
             blk = pos_b // page
-            written = {k: paged_written_blocks(c1[k], blk, 1, page)[0]
-                       for k in pkeys}
+            written = {}
+            for k in pkeys:
+                w = paged_written_blocks(c1[k], blk, 1, page)[0]
+                if quant:
+                    written[k], written[f"{k}_scale"] = quantize_kv(w)
+                else:
+                    written[k] = w
             pid = jnp.where(act_b, jnp.take(tab_b, blk), 0)
             return (nxt, fin, written, pid), {k: c1[k] for k in rest}
 
         (nxt, fin, written, pids), rest1 = jax.vmap(
             one, in_axes=(1, 0, 0, 0, 0), out_axes=((0, 0, 0, 0), 1))(
             rest, tok, pos, table, active)
-        for k in pkeys:
+        for k in paged:
             paged[k] = paged[k].at[:, pids].set(
                 jnp.moveaxis(written[k], 0, 1))
         return (nxt, fin), {**rest1, **paged}
@@ -453,11 +486,17 @@ class InferenceEngine:
         them are extracted, and blocks past the slot's last written block —
         plus everything from inactive slots — are redirected to scratch page
         0, so rejected-draft tails overwrite only pages the slot owns (the
-        contiguous pool needs spec_slack spare rows for exactly this)."""
+        contiguous pool needs spec_slack spare rows for exactly this).
+
+        ``kv_quant`` follows the decode twin: dequantize-in-gather,
+        re-quantize the extracted window blocks (payload + scale) before the
+        scatter."""
         cfg, page = self.cfg, self.sc.page_size
         pkeys = paged_keys(cfg)
-        paged = {k: cache[k] for k in pkeys}
-        rest = {k: v for k, v in cache.items() if k not in pkeys}
+        quant = self.sc.kv_quant
+        skeys = tuple(f"{k}_scale" for k in pkeys) if quant else ()
+        paged = {k: cache[k] for k in (*pkeys, *skeys)}
+        rest = {k: v for k, v in cache.items() if k not in paged}
         pos = jnp.where(active, pos, 0)
         tokens = jnp.concatenate([tok[:, None], drafts], axis=1)  # (B, K+1)
         w = tokens.shape[1]
@@ -465,7 +504,13 @@ class InferenceEngine:
         mb = table.shape[1]
 
         def one(rest_b, toks_b, pos_b, tab_b, act_b):
-            virt = {k: paged_virtual_cache(paged[k], tab_b) for k in pkeys}
+            if quant:
+                virt = {k: dequantize_kv(
+                    paged_virtual_cache(paged[k], tab_b),
+                    paged_virtual_cache(paged[f"{k}_scale"], tab_b))
+                    for k in pkeys}
+            else:
+                virt = {k: paged_virtual_cache(paged[k], tab_b) for k in pkeys}
             c1 = jax.tree.map(lambda t: jnp.expand_dims(t, 1),
                               {**rest_b, **virt})
             logits, c1 = decode_verify(params, c1, toks_b[None, :], pos_b, cfg)
@@ -478,8 +523,13 @@ class InferenceEngine:
             c1 = jax.tree.map(lambda t: jnp.squeeze(t, 1), c1)
             first_blk = pos_b // page
             last_blk = (pos_b + w - 1) // page
-            written = {k: paged_written_blocks(c1[k], first_blk, nw, page)
-                       for k in pkeys}
+            written = {}
+            for k in pkeys:
+                wb = paged_written_blocks(c1[k], first_blk, nw, page)
+                if quant:
+                    written[k], written[f"{k}_scale"] = quantize_kv(wb)
+                else:
+                    written[k] = wb
             blks = first_blk + jnp.arange(nw)
             valid = act_b & (blks <= last_blk)
             pids = jnp.where(valid,
@@ -490,7 +540,7 @@ class InferenceEngine:
             one, in_axes=(1, 0, 0, 0, 0), out_axes=((0, 0, 0, 0, 0), 1))(
             rest, tokens, pos, table, active)
         flat = pids.reshape(-1)  # (B * nw,) — duplicates only ever hit scratch
-        for k in pkeys:
+        for k in paged:
             wr = written[k]  # (B, nw, lead, page, *tail)
             wr = jnp.moveaxis(wr, 2, 0)  # (lead, B, nw, page, *tail)
             wr = wr.reshape(wr.shape[0], -1, page, *wr.shape[4:])

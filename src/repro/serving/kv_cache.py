@@ -96,20 +96,58 @@ def paged_keys(cfg: ArchConfig) -> tuple[str, ...]:
     raise ValueError(f)
 
 
-def page_defs(cfg: ArchConfig, *, num_pages: int, page_size: int) -> dict:
+def page_defs(cfg: ArchConfig, *, num_pages: int, page_size: int,
+              kv_quant: str | None = None) -> dict:
     """Paged layout for the sequence-dim cache leaves: ``(lead, num_pages,
     page_size, ...)`` — one shared physical-page axis in place of the
     per-slot (batch, seq) rectangle. Page index 0 is reserved as a scratch
-    page by the pool (unmapped table entries point at it)."""
+    page by the pool (unmapped table entries point at it).
+
+    ``kv_quant="int8"`` stores each paged payload as int8 with a companion
+    f32 ``{key}_scale`` leaf of the payload shape minus its feature (last)
+    axis — one symmetric scale per (page, row, head). Scales ride the same
+    page axis as their payload, so every pure page-index operation (copy /
+    zero / swap / restore) treats them as just more paged leaves.
+    """
+    if kv_quant not in (None, "int8"):
+        raise ValueError(f"unsupported kv_quant {kv_quant!r}")
     defs = cache_defs(cfg, batch=num_pages, max_len=page_size)
     out = {}
     for key in paged_keys(cfg):
         d = defs[key]
         # the page axis is deliberately unsharded (pages migrate between
         # requests); the in-page seq axis keeps the flash-decoding mapping
-        out[key] = ParamDef(d.shape, (d.logical[0], None) + d.logical[2:],
-                            init="zeros", dtype=d.dtype)
+        logical = (d.logical[0], None) + d.logical[2:]
+        if kv_quant == "int8":
+            out[key] = ParamDef(d.shape, logical, init="zeros", dtype=jnp.int8)
+            out[f"{key}_scale"] = ParamDef(d.shape[:-1], logical[:-1],
+                                           init="zeros", dtype=jnp.float32)
+        else:
+            out[key] = ParamDef(d.shape, logical, init="zeros", dtype=d.dtype)
     return out
+
+
+def quantize_kv(x):
+    """Symmetric per-row int8 quantization over the FEATURE (last) axis.
+
+    Same convention as ``kernels.ref.quantize_rowwise`` (regression-pinned in
+    tests): ``scale = max(|x|, 1e-8) / 127``, computed with ``jnp.maximum``
+    so a NaN payload poisons its scale — int8 cannot carry the NaN itself,
+    and the pool's fault hygiene watches the f32 scale leaves instead.
+    Re-quantizing already-quantized rows is exactly idempotent (the max
+    element maps back to ±127), so block-granular re-scatter per decode tick
+    does not drift. Returns ``(q int8, scale f32 of x.shape[:-1])``.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Inverse of ``quantize_kv``: ``q * scale`` broadcast over the feature axis."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 def _defs_bytes(defs: dict) -> int:
@@ -123,12 +161,15 @@ def cache_bytes(cfg: ArchConfig, *, batch: int, max_len: int) -> int:
 
 
 def paged_cache_bytes(cfg: ArchConfig, *, batch: int, num_pages: int,
-                      page_size: int, max_blocks: int) -> int:
-    """HBM bytes of the paged layout: the shared page arrays, plus the
-    per-slot UNPAGED leaves (SSM conv/state, audio cross K/V — none of which
-    depend on max_len), plus the dense int32 page table."""
+                      page_size: int, max_blocks: int,
+                      kv_quant: str | None = None) -> int:
+    """HBM bytes of the paged layout: the shared page arrays (int8 payloads
+    + f32 scales under ``kv_quant``), plus the per-slot UNPAGED leaves (SSM
+    conv/state, audio cross K/V — none of which depend on max_len), plus the
+    dense int32 page table."""
     unpaged = {k: d for k, d in cache_defs(cfg, batch=batch, max_len=1).items()
                if k not in paged_keys(cfg)}
-    return (_defs_bytes(page_defs(cfg, num_pages=num_pages, page_size=page_size))
+    return (_defs_bytes(page_defs(cfg, num_pages=num_pages, page_size=page_size,
+                                  kv_quant=kv_quant))
             + _defs_bytes(unpaged)
             + batch * max_blocks * jnp.dtype(jnp.int32).itemsize)

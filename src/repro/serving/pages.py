@@ -112,7 +112,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.params import init_params
-from repro.serving.kv_cache import cache_defs, page_defs, paged_keys
+from repro.serving.kv_cache import (cache_defs, dequantize_kv, page_defs,
+                                    paged_keys, quantize_kv)
 from repro.serving.slots import SlotInfo, SlotPool
 
 SCRATCH = 0  # reserved physical page: unmapped / redirected writes land here
@@ -187,7 +188,8 @@ class PagedSlotPool(SlotPool):
 
     def __init__(self, cfg: ArchConfig, *, max_batch: int, max_len: int,
                  page_size: int = 16, slack: int = 0,
-                 num_pages: int | None = None, share_prefix: bool = False):
+                 num_pages: int | None = None, share_prefix: bool = False,
+                 kv_quant: str | None = None):
         super().__init__(cfg, max_batch=max_batch, max_len=max_len,
                          virtual=True, slack=slack)
         self.page = int(page_size)
@@ -200,6 +202,15 @@ class PagedSlotPool(SlotPool):
         self.virtual_len = self.max_blocks * self.page
         self.capacity = self.virtual_len  # what the gathered jits attend over
         self._pkeys = paged_keys(cfg)
+        # int8 page residency: payloads store int8, per-row f32 scales ride a
+        # parallel "{key}_scale" paged leaf. Pure page-index operations (copy /
+        # zero / swap / restore / scrub) treat payloads and scales uniformly
+        # via _pleaves; only the quantize (admit/activate/engine scatter) and
+        # dequantize (gather) sites know which is which.
+        self.kv_quant = kv_quant if self._pkeys else None
+        self._skeys = (tuple(f"{k}_scale" for k in self._pkeys)
+                       if self.kv_quant else ())
+        self._pleaves = self._pkeys + self._skeys
         # recurrent SSM state is not positional — prefix K/V reuse is
         # unsound; frontend families (vlm/audio) are excluded too, since the
         # registry digests prompt TOKENS only and early cache rows also
@@ -215,7 +226,7 @@ class PagedSlotPool(SlotPool):
         self.pages = PagePool(self.num_pages)
         self.table = np.zeros((max_batch, self.max_blocks), np.int32)
         defs = dict(page_defs(cfg, num_pages=self.num_pages,
-                              page_size=self.page))
+                              page_size=self.page, kv_quant=self.kv_quant))
         for key, d in cache_defs(cfg, batch=max_batch, max_len=1).items():
             if key not in self._pkeys:
                 defs[key] = d  # unpaged leaves are max_len-independent
@@ -255,22 +266,29 @@ class PagedSlotPool(SlotPool):
     # -- device-side primitives (pool-owned jits) ----------------------------
     def _admit_impl(self, cache, req_cache, slot, pids):
         """Land a batch-1 request cache: paged leaves are padded to whole
-        blocks and scattered to ``pids``; unpaged leaves overwrite the slot
-        row."""
+        blocks and scattered to ``pids`` (quantize-on-write under
+        ``kv_quant``); unpaged leaves overwrite the slot row."""
         page, nb = self.page, pids.shape[0]
         out = {}
         for key, leaf in cache.items():
-            r = req_cache[key].astype(leaf.dtype)
+            if key in self._skeys:
+                continue  # written alongside its payload below
             if key in self._pkeys:
-                r = r[:, 0]  # (lead, s, *tail)
+                r = req_cache[key][:, 0]  # (lead, s, *tail)
                 widths = [(0, 0), (0, nb * page - r.shape[1])]
                 widths += [(0, 0)] * (r.ndim - 2)
                 r = jnp.pad(r, widths)
                 r = r.reshape(r.shape[0], nb, page, *r.shape[2:])
-                out[key] = leaf.at[:, pids].set(r)
+                if self.kv_quant:
+                    q, s = quantize_kv(r)
+                    out[key] = leaf.at[:, pids].set(q)
+                    sk = f"{key}_scale"
+                    out[sk] = cache[sk].at[:, pids].set(s)
+                else:
+                    out[key] = leaf.at[:, pids].set(r.astype(leaf.dtype))
             else:
                 out[key] = jax.lax.dynamic_update_slice_in_dim(
-                    leaf, r, slot, axis=1)
+                    leaf, req_cache[key].astype(leaf.dtype), slot, axis=1)
         return out
 
     def _activate_impl(self, cache, group_cache, slot, j, pids, *, bs, nb):
@@ -281,15 +299,22 @@ class PagedSlotPool(SlotPool):
         page = self.page
         out = {}
         for key, leaf in cache.items():
+            if key in self._skeys:
+                continue  # written alongside its payload below
             row = jax.lax.dynamic_slice_in_dim(group_cache[key], j, 1, axis=1)
-            row = row.astype(leaf.dtype)
             if key in self._pkeys:
                 r = row[:, 0, bs * page : nb * page]
                 r = r.reshape(r.shape[0], nb - bs, page, *r.shape[2:])
-                out[key] = leaf.at[:, pids].set(r)
+                if self.kv_quant:
+                    q, s = quantize_kv(r)
+                    out[key] = leaf.at[:, pids].set(q)
+                    sk = f"{key}_scale"
+                    out[sk] = cache[sk].at[:, pids].set(s)
+                else:
+                    out[key] = leaf.at[:, pids].set(r.astype(leaf.dtype))
             else:
                 out[key] = jax.lax.dynamic_update_slice_in_dim(
-                    leaf, row, slot, axis=1)
+                    leaf, row.astype(leaf.dtype), slot, axis=1)
         return out
 
     def _fill_prefix_impl(self, group_cache, cache, tables):
@@ -298,6 +323,9 @@ class PagedSlotPool(SlotPool):
         out = dict(group_cache)
         for key in self._pkeys:
             g = jnp.take(cache[key], tables, axis=1)  # (lead, k, bs, page, *)
+            if self.kv_quant:  # dequantize-in-gather
+                s = jnp.take(cache[f"{key}_scale"], tables, axis=1)
+                g = dequantize_kv(g, s)
             rows = g.reshape(g.shape[0], g.shape[1], g.shape[2] * g.shape[3],
                              *g.shape[4:])
             gc = group_cache[key]
@@ -306,7 +334,7 @@ class PagedSlotPool(SlotPool):
 
     def _copy_pages_impl(self, cache, srcs, dsts):
         out = dict(cache)
-        for key in self._pkeys:
+        for key in self._pleaves:
             leaf = cache[key]
             out[key] = leaf.at[:, dsts].set(jnp.take(leaf, srcs, axis=1))
         return out
@@ -314,7 +342,7 @@ class PagedSlotPool(SlotPool):
     def _copy_row_impl(self, cache, src, dst):
         out = dict(cache)
         for key, leaf in cache.items():
-            if key in self._pkeys:
+            if key in self._pleaves:
                 continue
             row = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
             out[key] = jax.lax.dynamic_update_slice_in_dim(leaf, row, dst,
@@ -323,7 +351,7 @@ class PagedSlotPool(SlotPool):
 
     def _zero_pages_impl(self, cache, pids):
         out = dict(cache)
-        for key in self._pkeys:
+        for key in self._pleaves:
             leaf = cache[key]
             z = jnp.zeros((leaf.shape[0], pids.shape[0]) + leaf.shape[2:],
                           leaf.dtype)
@@ -333,7 +361,7 @@ class PagedSlotPool(SlotPool):
     def _zero_row_impl(self, cache, slot):
         out = dict(cache)
         for key, leaf in cache.items():
-            if key in self._pkeys:
+            if key in self._pleaves:
                 continue
             row = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
             out[key] = jax.lax.dynamic_update_slice_in_dim(
@@ -346,7 +374,7 @@ class PagedSlotPool(SlotPool):
         bytes ``swap_out`` gathered, so the restore is bit-identical."""
         out = {}
         for key, leaf in cache.items():
-            if key in self._pkeys:
+            if key in self._pleaves:
                 out[key] = leaf.at[:, pids].set(pages[key].astype(leaf.dtype))
             else:
                 out[key] = jax.lax.dynamic_update_slice_in_dim(
@@ -354,9 +382,14 @@ class PagedSlotPool(SlotPool):
         return out
 
     def _nan_impl(self, cache, pids, slot):
+        # int8 payloads cannot carry a NaN — their f32 scale leaves do, and
+        # dequantize-in-gather (q * NaN) re-poisons every value they cover,
+        # so the engine's finiteness guard fires exactly as in f32 mode.
         out = dict(cache)
         for key, leaf in cache.items():
-            if key in self._pkeys:
+            if key in self._pleaves:
+                if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                    continue
                 v = jnp.full((leaf.shape[0], pids.shape[0]) + leaf.shape[2:],
                              jnp.nan, leaf.dtype)
                 out[key] = leaf.at[:, pids].set(v)
@@ -702,7 +735,7 @@ class PagedSlotPool(SlotPool):
         finiteness guard fired: a poisoned slot's redirected verify-window
         writes may have parked NaNs in scratch, which every slot's unmapped
         blocks gather."""
-        if self._pkeys:
+        if self._pleaves:
             self.cache = self._zero_pages_jit(
                 self.cache, jnp.asarray([SCRATCH], jnp.int32))
 
@@ -730,9 +763,9 @@ class PagedSlotPool(SlotPool):
         computable before building the image."""
         nb = self._blocks_for(self.slots[slot].pos)
         page_b = sum(self.cache[k].nbytes // self.num_pages
-                     for k in self._pkeys)
+                     for k in self._pleaves)
         row_b = sum(v.nbytes // self.max_batch
-                    for k, v in self.cache.items() if k not in self._pkeys)
+                    for k, v in self.cache.items() if k not in self._pleaves)
         return nb * page_b + row_b
 
     def swap_out(self, slot: int) -> dict:
@@ -750,9 +783,9 @@ class PagedSlotPool(SlotPool):
         pids = [int(self.table[slot, b]) for b in range(nb)]
         assert SCRATCH not in pids, (slot, pids)
         idx = jnp.asarray(pids, jnp.int32)
-        pages = {k: np.asarray(self.cache[k][:, idx]) for k in self._pkeys}
+        pages = {k: np.asarray(self.cache[k][:, idx]) for k in self._pleaves}
         row = {k: np.asarray(v[:, slot : slot + 1])
-               for k, v in self.cache.items() if k not in self._pkeys}
+               for k, v in self.cache.items() if k not in self._pleaves}
         image = {
             "rid": info.rid, "pos": info.pos, "budget": info.budget,
             "emitted": info.emitted, "tier": info.tier,
