@@ -148,10 +148,17 @@ def main(argv=None) -> None:
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     artifact = out_dir / f"BENCH_{stamp}.json"
+    # schema v2: both drivers share the version + meta block shape that
+    # scripts/check_bench.py validates (driver knobs live under "meta")
     artifact.write_text(json.dumps({
+        "schema_version": 2,
         "timestamp_utc": stamp,
-        "warmup": args.warmup,
-        "repeats": args.repeats,
+        "meta": {
+            "driver": "run",
+            "quick": bool(args.quick),
+            "warmup": args.warmup,
+            "repeats": args.repeats,
+        },
         "results": results,
     }, indent=1, sort_keys=True))
     print(f"\nwrote {artifact}")

@@ -84,6 +84,22 @@ worse than f32, and the minimum per-family agreement must clear the floor
 in ``scripts/check_bench.py`` (int8 serving is argmax-agreement close, NOT
 token-identical — see docs/kernels.md for the tolerance semantics).
 
+A seventh scenario, ``serve_power_cap``, drives the mixed-SLO-tier bursty
+stream through a seeded :class:`PowerEnvelope` (one sustained cap window
+plus thermal-throttle dips) composed with the ``therm=`` fault axis, three
+ways: ignore the cap (violations counted, nothing enforced — the
+measurement baseline), naive uniform hard-throttling (every busy tick
+paced to the cap, both tiers slowed identically), and the hysteretic
+brownout ladder (``serving/brownout.py``: shrink speculation, fall back
+to blocking, duty-cycle idle, then preempt/shed batch-tier work so the
+latency tier keeps its deadlines). Gated: the ladder must turn at least
+as much energy into ON-TIME completions as uniform throttling
+(``brownout_goodput_per_j_gain`` >= 1) at ZERO cap violations in any
+compliance window (``cap_violation_free`` == 1) while serving the latency
+tier at least as fast (``latency_tier_p99_gain`` >= 1); the ignore arm
+must actually witness violations (``ignore_cap_violation_ticks`` >= 1) or
+the envelope never bound and the comparison is vacuous.
+
 Reported per mode: items/J, p50/p99 latency, reloads, accepted/tick;
 headline ratios go into the BENCH_<timestamp>.json artifact (via
 benchmarks/run.py, or standalone: ``python benchmarks/serve_bench.py
@@ -106,6 +122,7 @@ from repro.serving.load import (
     poisson_stream,
     shared_prefix_stream,
 )
+from repro.serving.power import PowerEnvelope
 from repro.serving.scheduler import (
     ContinuousBatchingScheduler,
     FixedCalibration,
@@ -661,6 +678,122 @@ def run_quantized(arch: str = "granite-3-8b", n: int = 48, cap_batch: int = 24,
     }
 
 
+def run_power_cap(arch: str = "whisper-tiny", n: int = 48, max_batch: int = 8,
+                  page_size: int = 16, speculate_k: int = 4,
+                  tier_mix: float = 0.375, seed: int = 0, execute: bool = True,
+                  therm_spec: str = "therm=0.1,thermf=0.5,thermt=24") -> dict:
+    """Bursty mixed-tier stream under a seeded power envelope, three ways.
+
+    The envelope (one sustained cap window over most of the stream plus
+    seeded thermal dips, composed with the ``therm=`` fault axis's dynamic
+    dips) is IDENTICAL across the arms:
+
+      ignore    measure violations, enforce nothing — what the ledger says
+                happens if the scheduler pretends the cap isn't there
+      uniform   pace EVERY busy tick to the cap (both tiers slowed alike)
+      ladder    the hysteretic brownout controller: degrade speculation and
+                admission first, then pace, then preempt/shed BATCH-tier
+                work so latency-tier deadlines survive the deficit
+
+    Gated: ladder >= uniform on on-time goodput/J and latency-tier p99 at
+    zero cap violations, and the ignore arm must witness violations (else
+    the cap never bound). Brownout changes scheduling only — all three
+    arms emit token-identical completions for every non-shed request."""
+    cfg = get_reduced_config(arch)
+    max_len, s0 = 96, 8
+    budget_max = max(OVERLOAD_NEW_TOKENS)
+    # parity pages: this scenario stresses WATTS, not memory — the pool
+    # must never hit page exhaustion, only the power governor
+    worst = -(-(s0 + budget_max + speculate_k) // page_size)
+    num_pages = 1 + max_batch * worst
+    cal = FixedCalibration(step_s=STEP_S, prefill_base_s=PREFILL_BASE_S,
+                           prefill_per_tok_s=PREFILL_TOK_S,
+                           verify_per_tok_s=VERIFY_TOK_S)
+    service = (PREFILL_BASE_S + PREFILL_TOK_S * s0
+               + float(np.mean(OVERLOAD_NEW_TOKENS)) * STEP_S)
+    reqs = bursty_stream(n, fast_rate_hz=3.0 * max_batch / service,
+                         slow_rate_hz=0.1 / service, p_leave_burst=0.05,
+                         seed=seed, vocab_size=cfg.vocab_size,
+                         prompt_lens=(s0,), new_tokens=OVERLOAD_NEW_TOKENS,
+                         prompt_period=PROMPT_PERIOD, tier_mix=tier_mix)
+    # per-tier deadlines, assigned post-hoc so all three arms share the
+    # stream; the latency-tier deadline sits between the ladder's and the
+    # uniform throttle's p99 under the cap, so tier protection converts
+    # directly into on-time completions
+    for r in reqs:
+        r.deadline_s = 4.0 * service if r.tier == "latency" else 60.0 * service
+    tiers = {r.rid: r.tier for r in reqs}
+    # the envelope spans the arrivals plus drain time, so the sustained cap
+    # window covers the burst the pool is still digesting
+    horizon = max(r.arrival_s for r in reqs) + 30.0 * service
+    env = PowerEnvelope.seeded(seed, horizon_s=horizon)
+    prof = make_profile(therm_spec, seed=seed)
+
+    def _tier_p99(rep, tier):
+        # no survivor bias: a shed (or failed) request was never served, so
+        # it is charged the run's makespan — uniform throttling that sheds
+        # latency-tier arrivals cannot improve its p99 by refusing them
+        lats = [(rep.time_s if r.shed or r.failed else r.latency_s)
+                for r in rep.records if tiers[r.rid] == tier]
+        return float(np.percentile(lats, 99)) if lats else 1e6
+
+    kw = dict(policy="adaptive", execute=execute, calibration=cal,
+              speculate_k=speculate_k, shed=True, faults=prof, power=env)
+    engine = InferenceEngine(cfg, sc=ServeConfig(
+        max_batch=max_batch, max_len=max_len, paged=True,
+        page_size=page_size, num_pages=num_pages))
+    ign = ContinuousBatchingScheduler(engine, **kw).run(reqs)
+    uni = ContinuousBatchingScheduler(engine, brownout="uniform", **kw).run(reqs)
+    lad = ContinuousBatchingScheduler(engine, brownout="ladder",
+                                      preempt="tiered", **kw).run(reqs)
+
+    gain = lad.goodput_per_joule / max(uni.goodput_per_joule, 1e-12)
+    p99_gain = (_tier_p99(uni, "latency")
+                / max(_tier_p99(lad, "latency"), 1e-12))
+    cap_free = float(lad.cap_violation_ticks == 0
+                     and uni.cap_violation_ticks == 0)
+    n_lat = sum(1 for t in tiers.values() if t == "latency")
+    print(f"\n{arch}: power cap, {n} requests ({n_lat} latency-tier), "
+          f"cap {env.caps[0].cap_w:.0f} W over "
+          f"[{env.caps[0].start_s:.2f}, {env.caps[0].end_s:.2f}] s, "
+          f"{len(env.scripted)} thermal dips, faults={therm_spec}")
+    for label, rep in (("ignore-cap", ign), ("uniform", uni),
+                       ("ladder", lad)):
+        print(f"  [{label:10s}] " + rep.summary())
+    print(f"  ladder vs uniform: {gain:.2f}x on-time items/J, latency-tier "
+          f"p99 {_tier_p99(lad, 'latency') * 1e3:.1f} ms vs "
+          f"{_tier_p99(uni, 'latency') * 1e3:.1f} ms ({p99_gain:.2f}x)")
+    print(f"  cap compliance: ignore {ign.cap_violation_ticks} violation "
+          f"ticks (peak {ign.peak_window_w:.0f} W), governed "
+          f"{uni.cap_violation_ticks}+{lad.cap_violation_ticks} "
+          f"(ladder dwell {tuple(lad.level_dwell)})")
+    return {
+        "cap_w": env.caps[0].cap_w,
+        "ignore_goodput_per_j": ign.goodput_per_joule,
+        "ignore_cap_violation_ticks": ign.cap_violation_ticks,
+        "ignore_peak_window_w": ign.peak_window_w,
+        "ignore_missed": ign.missed,
+        "uniform_goodput_per_j": uni.goodput_per_joule,
+        "uniform_cap_violation_ticks": uni.cap_violation_ticks,
+        "uniform_brownout_ticks": uni.brownout_ticks,
+        "uniform_forgone_j": uni.brownout_forgone_j,
+        "uniform_missed": uni.missed,
+        "ladder_goodput_per_j": lad.goodput_per_joule,
+        "ladder_cap_violation_ticks": lad.cap_violation_ticks,
+        "ladder_brownout_ticks": lad.brownout_ticks,
+        "ladder_transitions": lad.brownout_transitions,
+        "ladder_forgone_j": lad.brownout_forgone_j,
+        "ladder_preempted": lad.preempted,
+        "ladder_shed": lad.shed,
+        "ladder_missed": lad.missed,
+        "brownout_goodput_per_j_gain": gain,
+        "ladder_latency_p99_ms": _tier_p99(lad, "latency") * 1e3,
+        "uniform_latency_p99_ms": _tier_p99(uni, "latency") * 1e3,
+        "latency_tier_p99_gain": p99_gain,
+        "cap_violation_free": cap_free,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small stream (CI smoke)")
@@ -697,13 +830,23 @@ def main(argv=None) -> int:
     pressure = run_memory_pressure(n=n_press, seed=args.seed)
     n_quant = 40 if args.quick else 48
     quant = run_quantized(n=n_quant, seed=args.seed)
+    n_power = 32 if args.quick else 48
+    power = run_power_cap(arch=args.arch, n=n_power, max_batch=batch,
+                          seed=args.seed, execute=not args.no_execute)
 
     stamp = datetime.now(timezone.utc).strftime("%Y%m%d-%H%M%S")
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     artifact = out_dir / f"BENCH_{stamp}.json"
     artifact.write_text(json.dumps({
+        "schema_version": 2,
         "timestamp_utc": stamp,
+        "meta": {
+            "driver": "serve_bench",
+            "quick": bool(args.quick),
+            "seed": args.seed,
+            "execute": not args.no_execute,
+        },
         "results": [{
             "name": "serve_continuous_batching",
             "arch": args.arch,
@@ -739,6 +882,12 @@ def main(argv=None) -> int:
             "arch": "granite-3-8b",
             "n_requests": n_quant,
             "derived": {k: float(v) for k, v in quant.items()},
+        }, {
+            "name": "serve_power_cap",
+            "arch": args.arch,
+            "n_requests": n_power,
+            "max_batch": batch,
+            "derived": {k: float(v) for k, v in power.items()},
         }],
     }, indent=1, sort_keys=True))
     print(f"\nwrote {artifact}")

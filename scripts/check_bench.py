@@ -62,6 +62,22 @@ claims as floors:
     quant_mean_argmax_agreement mean of the same over the five
                                 families                            >= 0.6
 
+  serve_power_cap (DETERMINISTIC — same fixed cost model, seeded power
+  envelope + thermal fault axis):
+    brownout_goodput_per_j_gain on-time completions/J, hysteretic
+                                brownout ladder vs naive uniform
+                                hard-throttling                     >= 1.0
+    latency_tier_p99_gain       latency-tier p99 (shed requests charged
+                                the makespan — refusing work cannot
+                                flatter the percentile), uniform vs
+                                ladder                              >= 1.0
+    cap_violation_free          1.0 iff BOTH governed arms end with
+                                cap_violation_ticks == 0 (any violation
+                                zeroes it and fails the floor)      >= 1.0
+    ignore_cap_violation_ticks  the unenforced arm must actually witness
+                                violations, or the envelope never bound
+                                and the comparison is vacuous       >= 1.0
+
   paper_lstm_C1_C2 (interpret-mode quick timings in CI — NOISY micro-shapes,
   so the floor is a catastrophic-regression guard, not the real margin; the
   committed full-run artifacts hold the true speedups):
@@ -111,6 +127,12 @@ QUANT_CHECKS = (
     ("quant_min_argmax_agreement", 0.3),
     ("quant_mean_argmax_agreement", 0.6),
 )
+POWER_CAP_CHECKS = (
+    ("brownout_goodput_per_j_gain", 1.0),
+    ("latency_tier_p99_gain", 1.0),
+    ("cap_violation_free", 1.0),
+    ("ignore_cap_violation_ticks", 1.0),
+)
 LSTM_CHECKS = (
     ("tpu_seq_speedup", 1.0),
     ("tpu_q8_speedup", 1.0),
@@ -123,8 +145,38 @@ CHECKS = {
     "serve_shared_prefix": ("tol", SHARED_CHECKS),
     "serve_memory_pressure": ("tol", MEMORY_PRESSURE_CHECKS),
     "serve_quantized": ("tol", QUANT_CHECKS),
+    "serve_power_cap": ("tol", POWER_CAP_CHECKS),
     "paper_lstm_C1_C2": ("tol_lstm", LSTM_CHECKS),
 }
+
+SCHEMA_VERSION = 2
+
+
+def validate(art: Path, doc) -> None:
+    """Artifact shape check. Version-2 artifacts (both drivers emit these
+    now) must carry the shared metadata block; artifacts WITHOUT a
+    ``schema_version`` key predate the schema and are tolerated as legacy
+    (the two kept full-run artifacts) — anything else is malformed."""
+    if not isinstance(doc, dict) or not isinstance(doc.get("results"), list):
+        sys.exit(f"check_bench: {art}: artifact must be an object with a "
+                 f"'results' list")
+    version = doc.get("schema_version")
+    if version is None:
+        return  # legacy artifact: results-only shape already checked
+    if version != SCHEMA_VERSION:
+        sys.exit(f"check_bench: {art}: schema_version {version!r} "
+                 f"(this checker understands {SCHEMA_VERSION})")
+    if not isinstance(doc.get("meta"), dict) or "driver" not in doc["meta"]:
+        sys.exit(f"check_bench: {art}: v{SCHEMA_VERSION} artifact needs a "
+                 f"'meta' object with a 'driver' key")
+    if not doc.get("timestamp_utc"):
+        sys.exit(f"check_bench: {art}: v{SCHEMA_VERSION} artifact needs "
+                 f"'timestamp_utc'")
+    for res in doc["results"]:
+        if not isinstance(res, dict) or "name" not in res \
+                or not isinstance(res.get("derived", {}), dict):
+            sys.exit(f"check_bench: {art}: malformed result entry "
+                     f"{res!r:.80}")
 
 
 def collect(paths: list[Path]) -> dict[str, tuple[str, dict]]:
@@ -144,6 +196,7 @@ def collect(paths: list[Path]) -> dict[str, tuple[str, dict]]:
             doc = json.loads(art.read_text())
         except (OSError, json.JSONDecodeError) as e:
             sys.exit(f"check_bench: cannot parse {art}: {e}")
+        validate(art, doc)
         key = (doc.get("timestamp_utc", ""), art.stat().st_mtime)
         for res in doc.get("results", []):
             name = res.get("name")

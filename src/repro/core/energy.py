@@ -61,6 +61,16 @@ class TPUChip:
         u = min(max(compute_util, 0.0), 1.0)
         return self.p_idle_w + (self.p_peak_w - self.p_idle_w) * u
 
+    def dvfs_power(self, compute_util: float, clock_frac: float) -> float:
+        """Power at a throttled clock: the dynamic term scales with the
+        clock fraction (frequency scaling), the static/idle term does not.
+        ``dvfs_power(u, 1.0) == step_power(u)``; a tick stretched to
+        ``base / f`` seconds therefore spends the same dynamic energy but
+        ``1/f`` times the static energy — the paper's Slow-Down trade."""
+        u = min(max(compute_util, 0.0), 1.0)
+        f = min(max(clock_frac, 0.0), 1.0)
+        return self.p_idle_w + (self.p_peak_w - self.p_idle_w) * u * f
+
     def reload_time(self, weight_bytes: float) -> float:
         return self.reload_fixed_s + weight_bytes / self.reload_bw
 

@@ -69,6 +69,25 @@ Robustness (any scheduler mode):
   --load flash      flash-crowd stream (baseline Poisson + one overload
                     spike window) — the shedding stress regime
 
+Power envelope (any scheduler mode; see docs/serving.md):
+  --power-cap       sustained power cap in watts over the whole run
+                    (0 = uncapped); the compliance ledger asserts no
+                    rolling window ever exceeds it
+  --power-faults    seeded thermal-throttle events drawn from the fault
+                    axis, e.g. "therm=0.1,thermf=0.5,thermt=24" — clock
+                    drops to the fraction, tick times stretch by 1/f,
+                    dynamic power scales by f (add to --fault-profile)
+  --brownout        how the scheduler meets a power deficit: "ladder"
+                    (hysteretic degradation ladder — spec window shrink,
+                    spec off, blocking admission, Slow-Down pacing,
+                    batch-tier preemption, batch-tier shedding; latency
+                    tier touched last), "uniform" (naive: stretch every
+                    busy tick with idle), or "off"
+  --energy-budget   hard energy budget in joules per --budget-window
+                    seconds (0 = none); the ledger GUARANTEES no window
+                    exceeds it, inserting idle when needed
+  --budget-window   the energy-budget window length in seconds
+
 Examples:
   python -m repro.launch.serve --arch granite-3-8b --load bursty --n 60
   python -m repro.launch.serve --arch granite-3-8b --mode chunked --prefill-chunk 8
@@ -77,11 +96,14 @@ Examples:
   python -m repro.launch.serve --arch granite-3-8b --mode strategies --trace bursty
   python -m repro.launch.serve --arch whisper-tiny --load flash --shed --deadline 0.5
   python -m repro.launch.serve --arch whisper-tiny --fault-profile light --retry-budget 4
+  python -m repro.launch.serve --arch whisper-tiny --power-cap 100 --brownout ladder \\
+      --tier-mix 0.3 --power-faults therm=0.1,thermf=0.5,thermt=24
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 
 import numpy as np
 
@@ -91,6 +113,7 @@ from repro.serving.engine import InferenceEngine, ServeConfig, WorkloadAwareServ
 from repro.core.retry import RestartPolicy
 from repro.serving.faults import make_profile
 from repro.serving.kv_cache import cache_bytes, paged_cache_bytes
+from repro.serving.power import CapWindow, PowerEnvelope
 from repro.serving.load import (
     bursty_stream_for_service,
     diurnal_stream,
@@ -214,6 +237,22 @@ def main(argv=None) -> int:
     ap.add_argument("--tier-mix", type=float, default=0.0,
                     help="fraction of requests on the interactive 'latency' "
                          "SLO tier (0 = all batch tier)")
+    ap.add_argument("--power-cap", type=float, default=0.0,
+                    help="sustained power cap in watts over the whole run "
+                         "(0 = uncapped); enforced by the compliance ledger")
+    ap.add_argument("--power-faults", default="",
+                    help="seeded thermal-throttle fault axis, e.g. "
+                         "'therm=0.1,thermf=0.5,thermt=24' (composes with "
+                         "--fault-profile)")
+    ap.add_argument("--brownout", default="off",
+                    choices=("off", "ladder", "uniform"),
+                    help="power-deficit response: hysteretic degradation "
+                         "ladder, naive uniform throttling, or none")
+    ap.add_argument("--energy-budget", type=float, default=0.0,
+                    help="hard energy budget in joules per --budget-window "
+                         "seconds (0 = none)")
+    ap.add_argument("--budget-window", type=float, default=1.0,
+                    help="energy-budget window length in seconds")
     ap.add_argument("--policy", default="adaptive",
                     choices=("on_off", "idle_waiting", "slow_down", "adaptive"))
     ap.add_argument("--trace", default="regular",
@@ -233,6 +272,10 @@ def main(argv=None) -> int:
         ap.error("--page-budget requires --paged")
     if args.quant_kv and not args.paged:
         ap.error("--quant-kv requires --paged")
+    if args.brownout != "off" and not (args.power_cap > 0 or args.power_faults
+                                       or args.energy_budget > 0):
+        ap.error("--brownout needs a power constraint: --power-cap, "
+                 "--power-faults, or --energy-budget")
 
     cfg = get_reduced_config(args.arch)
     if args.quant_weights:
@@ -250,7 +293,10 @@ def main(argv=None) -> int:
                                                  num_pages=args.page_budget or None,
                                                  share_prefix=args.share_prefix,
                                                  kv_quant="int8" if args.quant_kv
-                                                 else None))
+                                                 else None,
+                                                 energy_budget_j=(
+                                                     args.energy_budget or None),
+                                                 budget_window_s=args.budget_window))
 
     if args.mode == "strategies":
         server = WorkloadAwareServer(engine, chips=args.chips)
@@ -279,6 +325,17 @@ def main(argv=None) -> int:
     print(f"{args.arch}: {args.load} stream, {args.n} requests, "
           f"t_step={cal.step_s() * 1e3:.2f} ms, pool={args.batch}")
     faults = make_profile(args.fault_profile, seed=args.seed)
+    if args.power_faults:
+        therm = make_profile(args.power_faults, seed=args.seed)
+        if therm is not None:
+            # graft the thermal axis onto the base profile: one generator,
+            # one seed, so the composed run stays deterministic
+            faults = therm if faults is None else dataclasses.replace(
+                faults, therm_rate=therm.therm_rate,
+                therm_frac=therm.therm_frac, therm_ticks=therm.therm_ticks)
+    env = None
+    if args.power_cap > 0:
+        env = PowerEnvelope(caps=(CapWindow(0.0, math.inf, args.power_cap),))
     retry = None
     if args.retry_budget >= 0:
         step = cal.step_s()
@@ -288,7 +345,9 @@ def main(argv=None) -> int:
     robust = dict(shed=args.shed,
                   queue_limit=args.queue_limit or None,
                   faults=faults if faults is not None and faults.enabled else None,
-                  retry=retry)
+                  retry=retry,
+                  power=env,
+                  brownout=None if args.brownout == "off" else args.brownout)
     # preempt/swap are paged-only scheduler knobs; keep them out of `robust`
     # so compare mode's contiguous rows stay valid
     preempt_kw = ({"preempt": args.preempt_policy, "swap": args.swap}

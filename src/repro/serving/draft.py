@@ -150,6 +150,17 @@ class SpecThrottle:
         self._ema: dict[int, float] = {}   # acceptance-rate EMA per rid
         self._idle: dict[int, int] = {}    # ticks spent throttled-to-0
 
+    @staticmethod
+    def halved(k: int, steps: int) -> int:
+        """Window after ``steps`` of the same halvings ``observe`` applies
+        on an acceptance stall. Shared with the brownout governor
+        (``serving/brownout.py``) so a power-degraded window walks the
+        identical ladder — and the identical verify-jit signatures — a
+        throttled window walks."""
+        for _ in range(max(steps, 0)):
+            k //= 2
+        return k
+
     def begin(self, rid: int) -> None:
         self._k[rid] = self.k_max
         self._ema[rid] = 1.0  # optimistic start: earn the full window

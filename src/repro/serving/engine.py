@@ -97,6 +97,16 @@ class ServeConfig:
     # the f32 path is NOT expected; the acceptance metric is argmax
     # agreement rate (see docs/kernels.md). "int8" or None.
     kv_quant: str | None = None
+    # hard energy-budget enforcement (serving/power.py): when set, the
+    # scheduler's rolling ledger is GUARANTEED never to exceed
+    # energy_budget_j joules in any budget_window_s-second window — busy
+    # ticks wait at p_idle_w until they fit, and a brownout governor (if
+    # one is running) degrades batch-tier service first so latency-tier
+    # deadlines survive the squeeze. None = unenforced. The budget must
+    # exceed the idle floor p_idle_w * chips * budget_window_s or no
+    # schedule is feasible (the scheduler raises at construction).
+    energy_budget_j: float | None = None
+    budget_window_s: float = 1.0
 
 
 class InferenceEngine:

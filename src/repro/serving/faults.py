@@ -7,7 +7,7 @@ whose draws are consumed in the scheduler's (deterministic) tick order, so
 a scenario is fully described by its :class:`FaultProfile` — rerunning the
 same stream with the same profile injects the identical fault sequence.
 
-Four fault classes, mirroring what real accelerator fleets see:
+Five fault classes, mirroring what real accelerator fleets see:
 
   NaN poisoning     a slot's device cache rows are overwritten with NaN
                     mid-decode (HBM corruption, a bad reduction, an overflow
@@ -31,6 +31,11 @@ Four fault classes, mirroring what real accelerator fleets see:
                     ballooning, fragmentation). Drives the scheduler's
                     watermark into preempting slots — mid-decode exhaustion
                     becomes deterministic and testable instead of a crash.
+  thermal throttle  the clock drops to fraction ``therm_frac`` at a busy
+                    tick and recovers linearly over ``therm_ticks``
+                    calibrated steps (``serving/power.py`` models the
+                    DVFS time-stretch and dynamic-power scaling). Feeds
+                    the brownout governor's degradation ladder.
 
 Profiles are wired through ``ServeConfig.faults`` (or passed to the
 scheduler directly), so an engine + config pair pins the whole scenario.
@@ -54,12 +59,16 @@ class FaultProfile:
     chunk_fault_rate: float = 0.0  # per chunked-prefill tick
     press_rate: float = 0.0       # per decode/verify tick on a paged pool
     press_pages: int = 2          # free pages pinned out per pressure event
+    therm_rate: float = 0.0       # per busy tick: thermal-throttle onset
+    therm_frac: float = 0.5       # clock fraction at the throttle onset
+    therm_ticks: int = 16         # recovery back to full clock, in cal steps
     max_faults: int | None = None  # cap on total injected events (None = ∞)
 
     @property
     def enabled(self) -> bool:
         return (self.nan_rate > 0 or self.stall_rate > 0
-                or self.chunk_fault_rate > 0 or self.press_rate > 0)
+                or self.chunk_fault_rate > 0 or self.press_rate > 0
+                or self.therm_rate > 0)
 
 
 # named scenarios for the launcher / benchmarks; ``seed`` is overridden by
@@ -83,7 +92,9 @@ def make_profile(spec: str, *, seed: int = 0) -> FaultProfile | None:
         return dataclasses.replace(prof, seed=seed)
     keys = {"nan": "nan_rate", "stall": "stall_rate", "stallx": "stall_factor",
             "chunk": "chunk_fault_rate", "press": "press_rate",
-            "pressn": "press_pages", "max": "max_faults"}
+            "pressn": "press_pages", "therm": "therm_rate",
+            "thermf": "therm_frac", "thermt": "therm_ticks",
+            "max": "max_faults"}
     kw: dict = {"seed": seed}
     for part in spec.split(","):
         k, _, v = part.partition("=")
@@ -91,7 +102,7 @@ def make_profile(spec: str, *, seed: int = 0) -> FaultProfile | None:
             raise ValueError(
                 f"bad fault spec {spec!r}: want a profile name "
                 f"({sorted(FAULT_PROFILES)}) or comma-joined {sorted(keys)}=float")
-        kw[keys[k]] = int(v) if k in ("max", "pressn") else float(v)
+        kw[keys[k]] = int(v) if k in ("max", "pressn", "thermt") else float(v)
     prof = FaultProfile(**kw)
     return prof if prof.enabled else None
 
@@ -144,6 +155,17 @@ class FaultInjector:
             self.events += 1
             return self.profile.press_pages
         return 0
+
+    def thermal(self) -> float | None:
+        """Clock fraction of a thermal-throttle event starting this busy
+        tick (``None`` = no event). Draws only when the axis is enabled, so
+        profiles without it keep their exact historical draw sequences."""
+        if self.profile.therm_rate <= 0:
+            return None
+        if self.rng.random() < self.profile.therm_rate and self._budget_left():
+            self.events += 1
+            return self.profile.therm_frac
+        return None
 
     def chunk_fails(self) -> bool:
         """Whether the current chunked-prefill step's work is lost."""

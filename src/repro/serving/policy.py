@@ -67,6 +67,13 @@ class DutyCyclePolicy:
         prefill advance, masked decode step) before the next gap decision."""
         self.busy_s[kind] = self.busy_s.get(kind, 0.0) + float(duration_s)
 
+    def on_throttle(self, idle_s: float) -> None:
+        """Brownout/cap-enforcement idle inserted INSIDE the busy stream —
+        the paper's Slow-Down imposed by the power governor rather than
+        chosen at a gap. Logged under its own kind so a gap decision can
+        see how much recent "busy" time was throttle stretch, not compute."""
+        self.on_busy("slow_down", idle_s)
+
     def on_gap(self, gap_s: float) -> GapOutcome:
         raise NotImplementedError
 

@@ -102,6 +102,22 @@ Robustness layer (overload + faults are routine at deployment scale):
              batch-tier slot instead of queueing. Preempted batch requests
              re-admit from the retry queue, so batch traffic is delayed,
              never starved.
+  POWER        a ``serving/power.PowerEnvelope`` makes the watts a time-
+             varying input: thermal events stretch busy ticks by 1/f and
+             scale the dynamic power term by f (``TPUChip.dvfs_power``),
+             sustained cap windows bound the rolling-window average draw,
+             and ``ServeConfig.energy_budget_j`` enforces a hard energy
+             budget per window. Enforcement inserts idle before a busy
+             tick until its window fits (so ``cap_violation_ticks`` is 0
+             by construction under a governor), and a hysteretic
+             ``serving/brownout.BrownoutController`` walks a degradation
+             ladder — spec window halved, spec off, chunked→blocking,
+             Slow-Down pacing, batch-tier preemption, batch-tier shedding
+             — so the latency tier is the last thing to feel the squeeze.
+             Every ladder action reuses a mechanism already proven token-
+             exact, so a brownout changes scheduling only: completed
+             requests are token-for-token identical to the unconstrained
+             run.
 
 ``run_static_batches`` is the baseline this subsystem replaces: fixed-batch
 lockstep serving (wait to fill a batch or flush on timeout, pad every
@@ -121,12 +137,14 @@ import numpy as np
 from repro.core.energy import DEFAULT_CHIP, TPUChip
 from repro.core.retry import RestartPolicy, StragglerDetector
 from repro.core.workload import AccelProfile, SimResult
+from repro.serving.brownout import BrownoutController, make_governor
 from repro.serving.draft import NgramDrafter, SpecThrottle
 from repro.serving.engine import ChunkedPrefillState, InferenceEngine, tpu_reload_costs
 from repro.serving.faults import FaultInjector, FaultProfile
 from repro.serving.load import Request
 from repro.serving.pages import PageExhausted, PagedSlotPool
 from repro.serving.policy import DutyCyclePolicy, make_policy
+from repro.serving.power import PowerEnvelope, RollingLedger
 from repro.serving.slots import SlotPool
 
 
@@ -325,6 +343,13 @@ class ServeReport:
     swapped: int = 0           # preemptions restored via swap-out/swap-in
     recomputed: int = 0        # preemptions restored via re-prefill
     preempt_wasted_j: float = 0.0  # swap transfers + restore re-prefills
+    brownout_ticks: int = 0        # governor updates at a degraded level
+    brownout_transitions: int = 0  # ladder level changes (always ±1)
+    cap_violation_ticks: int = 0   # busy ticks whose window broke the cap
+    brownout_forgone_j: float = 0.0  # idle energy inserted to honour the cap
+    level_dwell: tuple = ()        # governor updates observed per level
+    peak_window_w: float = 0.0     # peak cap-window mean power (conservative)
+    peak_budget_window_j: float = 0.0  # peak energy in any budget window
 
     @property
     def items(self) -> int:
@@ -390,6 +415,10 @@ class ServeReport:
                       f"preempt_waste={self.preempt_wasted_j:.3f}J")
         if self.evictions:
             extra += f" evict={self.evictions}"
+        if self.brownout_ticks or self.cap_violation_ticks:
+            extra += (f" brownout={self.brownout_ticks} "
+                      f"capviol={self.cap_violation_ticks} "
+                      f"forgone={self.brownout_forgone_j:.3f}J")
         return (f"{self.mode:11s} items={self.items} items/J={self.items_per_joule:.5f} "
                 f"p50={self.p50_s * 1e3:.1f}ms p99={self.p99_s * 1e3:.1f}ms "
                 f"reloads={self.reloads} missed={self.missed}{extra}")
@@ -472,6 +501,17 @@ class ContinuousBatchingScheduler:
                        ``preempt=None``, paged runs never crash on page
                        exhaustion: a mid-tick ``PageExhausted`` triggers an
                        emergency preempt-and-retry with a default policy.
+      ``power``      a ``PowerEnvelope`` (thermal clock events + sustained
+                       cap windows). Busy ticks stretch by 1/f and their
+                       dynamic power scales by f; the rolling compliance
+                       ledger counts ``cap_violation_ticks`` and — under a
+                       governor — inserts idle until every window fits.
+                       Auto-created when the fault profile enables the
+                       ``therm=`` axis.
+      ``brownout``     ``"ladder"`` (hysteretic degradation ladder),
+                       ``"uniform"`` (naive pace-everything baseline), a
+                       ``BrownoutController`` instance, or None. Also the
+                       enforcement arm for ``ServeConfig.energy_budget_j``.
     """
 
     def __init__(self, engine: InferenceEngine, *,
@@ -487,7 +527,9 @@ class ContinuousBatchingScheduler:
                  spec_throttle: bool = False,
                  detector: StragglerDetector | None = None,
                  preempt: str | PreemptionPolicy | None = None,
-                 swap: bool = True):
+                 swap: bool = True,
+                 power: PowerEnvelope | None = None,
+                 brownout: str | BrownoutController | None = None):
         if not execute and calibration is None:
             raise ValueError("execute=False needs an explicit calibration")
         if preempt is not None and not (execute and engine.sc.paged):
@@ -533,6 +575,18 @@ class ContinuousBatchingScheduler:
         self.preempter = make_preemption_policy(preempt)
         self.swap = swap
         self.faults = faults if faults is not None else sc.faults
+        self.power = power
+        self.brownout = brownout
+        make_governor(brownout)  # validate the spec eagerly
+        if sc.energy_budget_j is not None:
+            if sc.budget_window_s <= 0:
+                raise ValueError("budget_window_s must be positive")
+            floor = chip.p_idle_w * chips * sc.budget_window_s
+            if sc.energy_budget_j <= floor:
+                raise ValueError(
+                    f"energy_budget_j={sc.energy_budget_j} is not above the "
+                    f"idle floor {floor:.1f} J per {sc.budget_window_s} s "
+                    f"window (p_idle_w x chips): no schedule is feasible")
         # backoff lives in VIRTUAL time, so the default scales with the
         # measured step: first retry waits ~2 ticks, growing 2x per attempt
         step = self.cal.step_s()
@@ -623,6 +677,37 @@ class ContinuousBatchingScheduler:
                if self.faults is not None and self.faults.enabled else None)
         n = len(reqs)
         pool, chip, chips = self.pool, self.chip, self.chips
+        # POWER: the envelope (scripted, or auto-created so the therm fault
+        # axis has somewhere to land its events), a fresh governor for this
+        # run, and the rolling compliance ledgers. Without an envelope,
+        # governor, or budget all of this is inert and the ledger matches
+        # the pre-power behaviour bit for bit (clock_frac == 1 path).
+        env = self.power
+        if env is None and self.faults is not None and self.faults.therm_rate > 0:
+            env = PowerEnvelope()
+        if env is not None:
+            env.reset()  # drop fault-driven events from any prior run
+        gov = make_governor(self.brownout)
+        self.last_governor = gov
+
+        def gov_defers(rid: int) -> bool:
+            """Hold batch-tier (re-)admission in the governor's preempt
+            band, so preemption shrinks the pool instead of churning
+            swaps. An EMPTY pool always admits — idle is already the
+            power floor, so deferring there would deadlock, not save."""
+            return (gov is not None and gov.defer_batch()
+                    and tiers[rid] != "latency" and pool.active_count > 0)
+
+        idle_w = chip.p_idle_w * chips
+        budget_j = self.engine.sc.energy_budget_j
+        cap_ledger = (RollingLedger(env.window_s, floor_w=idle_w)
+                      if env is not None else None)
+        bud_ledger = (RollingLedger(
+            self.engine.sc.budget_window_s,
+            cap_w=budget_j / self.engine.sc.budget_window_s,
+            floor_w=idle_w) if budget_j is not None else None)
+        forgone_j = 0.0        # idle inserted to honour caps/budget
+        cap_violations = 0
         t = reqs[0].arrival_s
         gap_energy = 0.0
         reloads = 0
@@ -654,10 +739,17 @@ class ContinuousBatchingScheduler:
                 self.faults is not None and self.faults.press_rate > 0)):
             # preempt/restore cycles add bounded extra iterations per event
             guard_max *= 4
+        if gov is not None:
+            # governor preemptions and paced/enforced idle add bounded
+            # extra iterations per escalation
+            guard_max *= 4
 
         def ingest() -> None:
             """Move everything that has arrived by ``t`` into the ready
-            queue, shedding past the ``queue_limit`` backpressure bound."""
+            queue, shedding past the ``queue_limit`` backpressure bound —
+            or, at the brownout ladder's top level, shedding new batch-tier
+            arrivals outright (latency-tier and retry traffic never shed
+            here)."""
             nonlocal i, shed
             while i < n and reqs[i].arrival_s <= t:
                 r = reqs[i]
@@ -666,8 +758,73 @@ class ContinuousBatchingScheduler:
                         and len(ready) >= self.queue_limit):
                     recs[r.rid].shed = True
                     shed += 1
+                elif (gov is not None and gov.shed_batch()
+                      and tiers[r.rid] != "latency"):
+                    recs[r.rid].shed = True
+                    shed += 1
                 else:
                     ready.append(r)
+
+        def record_span(t0: float, t1: float, joules: float) -> None:
+            """Feed a non-enforced span (swap transfer, stall tail, policy
+            gap) to the compliance ledgers and the governor's estimate."""
+            if t1 <= t0:
+                return
+            w = joules / (t1 - t0)
+            if cap_ledger is not None:
+                cap_ledger.add(t0, t1, w)
+            if bud_ledger is not None:
+                bud_ledger.add(t0, t1, w)
+            if gov is not None:
+                gov.observe(t0, t1, joules)
+
+        def busy_tick(kind: str, base_s: float, util: float,
+                      stall: float = 1.0) -> tuple[float, float]:
+            """One busy tick through the power envelope. The clock fraction
+            stretches the calibrated time by 1/f and scales the dynamic
+            power term by f (``TPUChip.dvfs_power``); governor pacing plus
+            whatever idle the cap/budget ledgers demand is inserted BEFORE
+            the tick (so enforced runs break no window, by construction);
+            the stall tail is charged at idle power — the device is
+            waiting, not computing. Returns (duration, energy) of the tick
+            itself; inserted idle is charged to the run's forgone-energy
+            ledger, not to any request."""
+            nonlocal t, forgone_j, cap_violations
+            f = env.clock_frac(t) if env is not None else 1.0
+            dur = base_s / f
+            busy_w = (chip.dvfs_power(util, f) if env is not None
+                      else chip.step_power(util)) * chips
+            env_cap = env.cap_w(t) if env is not None else math.inf
+            cap_eff = env_cap
+            if bud_ledger is not None:
+                cap_eff = min(cap_eff, bud_ledger.cap_w)
+            idle_s = 0.0
+            if gov is not None:
+                idle_s = gov.pace_idle(dur, busy_w, cap_eff)
+                if cap_ledger is not None:
+                    idle_s = max(idle_s, cap_ledger.idle_needed(
+                        t, dur, busy_w, cap_w=env_cap))
+            if bud_ledger is not None:
+                idle_s = max(idle_s, bud_ledger.idle_needed(t, dur, busy_w))
+            if idle_s > 0:
+                record_span(t, t + idle_s, idle_w * idle_s)
+                forgone_j += idle_w * idle_s
+                self.policy.on_throttle(idle_s)
+                t += idle_s
+            tail = dur * (max(stall, 1.0) - 1.0)
+            t0 = t
+            t += dur + tail
+            record_span(t0, t0 + dur, busy_w * dur)
+            record_span(t0 + dur, t, idle_w * tail)
+            if cap_ledger is not None and cap_ledger.violates(t0 + dur,
+                                                              cap_w=env_cap):
+                cap_violations += 1
+            if bud_ledger is not None and bud_ledger.violates(t0 + dur):
+                cap_violations += 1
+            if gov is not None:
+                gov.update(t, cap_eff)
+            self.policy.on_busy(kind, dur + tail)
+            return dur + tail, busy_w * dur + idle_w * tail
 
         def shed_scan() -> None:
             """Deadline re-check over the whole ready queue: drop requests
@@ -733,9 +890,10 @@ class ContinuousBatchingScheduler:
             if image is not None:
                 dt = image["bytes"] / (chip.reload_bw * chips)
                 pool.swap_in(slot, image)
+                ej = chip.p_idle_w * chips * dt
+                record_span(t, t + dt, ej)
                 t += dt
                 self.policy.on_busy("swap", dt)
-                ej = chip.p_idle_w * chips * dt
                 rec.energy_j += ej
                 preempt_waste += ej
             else:
@@ -751,9 +909,7 @@ class ContinuousBatchingScheduler:
                     pool.admit_virtual(slot, rid=rid, pos=len(context),
                                        budget=budget, emitted=emitted)
                     pool.tok[slot] = next_tok
-                t += tp
-                self.policy.on_busy("prefill", tp)
-                ej = chip.step_power(self.prefill_util) * chips * tp
+                _, ej = busy_tick("prefill", tp, self.prefill_util)
                 rec.energy_j += ej
                 if e.get("preempt"):
                     preempt_waste += ej
@@ -805,9 +961,10 @@ class ContinuousBatchingScheduler:
                 if t_swap <= t_rec:
                     image = pool.swap_out(slot)
                     dt = image["bytes"] / (chip.reload_bw * chips)
+                    ej = chip.p_idle_w * chips * dt
+                    record_span(t, t + dt, ej)
                     t += dt
                     self.policy.on_busy("swap", dt)
-                    ej = chip.p_idle_w * chips * dt
                     rec.energy_j += ej
                     preempt_waste += ej
                     swapped += 1
@@ -900,7 +1057,9 @@ class ContinuousBatchingScheduler:
                         if self.preempter is not None else range(len(retry_q)))
                 idx = next(
                     (j for j in scan
-                     if retry_q[j]["ready_at"] <= t and pool.can_admit(
+                     if retry_q[j]["ready_at"] <= t
+                     and not gov_defers(retry_q[j]["rid"])
+                     and pool.can_admit(
                          len(by_rid[retry_q[j]["rid"]].prompt)
                          + retry_q[j]["emitted"] - 1,
                          retry_q[j]["budget"] - retry_q[j]["emitted"] + 1)),
@@ -915,6 +1074,15 @@ class ContinuousBatchingScheduler:
                     retry_q.insert(0, e)
                     break
                 ingest()
+
+            if gov is not None and paged and gov.take_preempt():
+                # brownout ladder level "preempt": shed watts by shedding
+                # batch-tier occupancy — one policy-ranked victim per
+                # escalation, consumed at a tick boundary (never mid-tick)
+                cands = victim_candidates(tier_only="batch")
+                if cands:
+                    pol = self.preempter or PreemptionPolicy()
+                    preempt_slot(pol.rank(cands)[0]["slot"])
 
             if self.preempter is not None:
                 # SLO tiers: latency-tier arrivals go first, and a latency
@@ -931,14 +1099,16 @@ class ContinuousBatchingScheduler:
                             break
                         preempt_slot(self.preempter.rank(cands)[0]["slot"])
 
-            if self.prefill_chunk is None or chunk_disabled:
+            if (self.prefill_chunk is None or chunk_disabled
+                    or (gov is not None and not gov.chunk_ok())):
                 # BLOCKING admissions: fill free slots from the ready queue;
                 # each prefill stalls the whole pool. can_admit covers the
                 # free-slot check and (paged) the head's worst-case page
                 # budget — admission stays FIFO, so a page-starved head
                 # waits rather than being jumped
-                while ready and pool.can_admit(len(ready[0].prompt),
-                                               ready[0].new_tokens):
+                while (ready and not gov_defers(ready[0].rid)
+                       and pool.can_admit(len(ready[0].prompt),
+                                          ready[0].new_tokens)):
                     r = ready.popleft()
                     rec = recs[r.rid]
                     # t advanced during earlier admissions — re-check
@@ -965,9 +1135,8 @@ class ContinuousBatchingScheduler:
                                            budget=r.new_tokens)
                     pool.slots[slot].tier = tiers[r.rid]
                     rec.admit_s = t
-                    t += tp
-                    self.policy.on_busy("prefill", tp)
-                    rec.energy_j += chip.step_power(self.prefill_util) * chips * tp
+                    _, ej = busy_tick("prefill", tp, self.prefill_util)
+                    rec.energy_j += ej
                     rec.tokens.append(first)
                     if self.drafter is not None:
                         self.drafter.begin(r.rid, list(r.prompt) + [first])
@@ -987,6 +1156,7 @@ class ContinuousBatchingScheduler:
                 g: list[Request] = []
                 slots: list[int] = []
                 while (ready and pool.free_count
+                       and not gov_defers(ready[0].rid)
                        and (not g
                             or (len(ready[0].prompt) == len(g[0].prompt)
                                 and self._prefix_len(ready[0]) == m0))
@@ -1022,12 +1192,15 @@ class ContinuousBatchingScheduler:
                 ttok = min(self.prefill_chunk, group.s0 - group.pos)
                 fail = inj.chunk_fails() if inj is not None else False
                 stall = inj.stall() if inj is not None else 1.0
-                tp = self.cal.chunk_s(k, ttok) * stall
-                t += tp
+                therm = inj.thermal() if inj is not None else None
+                if therm is not None:
+                    env.throttle(t, therm,
+                                 self.faults.therm_ticks * self.cal.step_s())
+                tp, te = busy_tick("prefill", self.cal.chunk_s(k, ttok),
+                                   self.prefill_util, stall)
                 self.chunks += 1
-                self.policy.on_busy("prefill", tp)
                 observe_tick(tp)
-                share = chip.step_power(self.prefill_util) * chips * tp / k
+                share = te / k
                 for rid in group.rids:
                     recs[rid].energy_j += share
                 progressed = True
@@ -1111,17 +1284,29 @@ class ContinuousBatchingScheduler:
             spec_k = 0
             win: dict[int, int] | None = None
             if decoding and self.speculate_k:
-                if self.throttle is not None:
+                # the brownout ladder caps windows from above (halved at
+                # spec_half, 0 at spec_off and beyond) — BATCH-tier slots
+                # only: latency-tier work is the last thing the ladder
+                # touches, so its windows ride through undegraded
+                k_gov = (gov.spec_cap(self.speculate_k) if gov is not None
+                         else self.speculate_k)
+                if gov is not None or self.throttle is not None:
                     # per-slot windows; the pool's verify width is their max
                     # (windows move in powers of two, so the K-keyed verify
                     # jit sees at most log2(K) distinct signatures)
-                    win = {s: self.throttle.window(pool.slots[s].rid)
-                           for s in decoding}
+                    win = {}
+                    for s in decoding:
+                        rid = pool.slots[s].rid
+                        k = (self.speculate_k if tiers[rid] == "latency"
+                             else k_gov)
+                        if self.throttle is not None:
+                            k = min(self.throttle.window(rid), k)
+                        win[s] = k
                     spec_k = max(win.values())
-                    if spec_k == 0:
+                    if spec_k == 0 and self.throttle is not None:
                         throttled += 1  # whole pool stalled: plain tick
                 else:
-                    spec_k = self.speculate_k
+                    spec_k = k_gov
 
             if paged and decoding:
                 # MEMORY PRESSURE phase: the page-pressure fault may pin
@@ -1146,6 +1331,10 @@ class ContinuousBatchingScheduler:
                 # per-candidate increment, amortized by tokens committed.
                 victims = inj.poison_victims(decoding) if inj is not None else []
                 stall = inj.stall() if inj is not None else 1.0
+                therm = inj.thermal() if inj is not None else None
+                if therm is not None:
+                    env.throttle(t, therm,
+                                 self.faults.therm_ticks * self.cal.step_s())
                 if victims and self.execute:
                     for s in victims:
                         self.engine.poison_slot(pool, s)
@@ -1175,13 +1364,11 @@ class ContinuousBatchingScheduler:
                     acc = np.cumprod(drafts == 0, axis=1).sum(axis=1)
                     fin = np.ones(pool.max_batch, bool)
                     fin[victims] = False
-                ts = self.cal.verify_s(spec_k) * stall
-                t += ts
-                self.verify_ticks += 1
-                self.policy.on_busy("verify", ts)
-                observe_tick(ts)
                 util = len(decoding) / pool.max_batch
-                tick_e = chip.step_power(util) * chips * ts
+                ts, tick_e = busy_tick("verify", self.cal.verify_s(spec_k),
+                                       util, stall)
+                self.verify_ticks += 1
+                observe_tick(ts)
                 # a slot never overshoots its budget (acceptance past the
                 # remaining budget is truncated, the slot retires mid-verify)
                 # nor its own throttle window; a quarantined slot's discarded
@@ -1217,10 +1404,13 @@ class ContinuousBatchingScheduler:
                 # DECODING: one masked step over the pool at measured occupancy
                 victims = inj.poison_victims(decoding) if inj is not None else []
                 stall = inj.stall() if inj is not None else 1.0
+                therm = inj.thermal() if inj is not None else None
+                if therm is not None:
+                    env.throttle(t, therm,
+                                 self.faults.therm_ticks * self.cal.step_s())
                 if victims and self.execute:
                     for s in victims:
                         self.engine.poison_slot(pool, s)
-                ts = self.cal.step_s() * stall
                 util = len(decoding) / pool.max_batch
                 if self.execute:
                     try:
@@ -1237,10 +1427,9 @@ class ContinuousBatchingScheduler:
                     nxt = np.zeros(pool.max_batch, np.int32)
                     fin = np.ones(pool.max_batch, bool)
                     fin[victims] = False
-                t += ts
-                self.policy.on_busy("decode", ts)
+                ts, te = busy_tick("decode", self.cal.step_s(), util, stall)
                 observe_tick(ts)
-                share = chip.step_power(util) * chips * ts / len(decoding)
+                share = te / len(decoding)
                 for slot in decoding:
                     info = pool.slots[slot]
                     rec = recs[info.rid]
@@ -1277,7 +1466,15 @@ class ContinuousBatchingScheduler:
                 out = self.policy.on_gap(gap)
                 gap_energy += out.energy_j
                 reloads += int(out.slept)
+                gap_t0 = t
                 t = target + out.wake_s
+                record_span(gap_t0, t, out.energy_j)
+                if gov is not None:
+                    # quiet spells de-escalate the ladder
+                    gap_cap = env.cap_w(t) if env is not None else math.inf
+                    if bud_ledger is not None:
+                        gap_cap = min(gap_cap, bud_ledger.cap_w)
+                    gov.update(t, gap_cap)
 
             peak_active = max(peak_active, pool.active_count)
 
@@ -1288,7 +1485,8 @@ class ContinuousBatchingScheduler:
 
         records = [recs[r.rid] for r in reqs]
         energy = (self.profile.e_cfg_j  # the one true initial configuration
-                  + sum(rec.energy_j for rec in records) + gap_energy)
+                  + sum(rec.energy_j for rec in records) + gap_energy
+                  + forgone_j)
         finished = [rec.finish_s for rec in records
                     if not math.isnan(rec.finish_s)]
         makespan = (max(finished) if finished else t) - reqs[0].arrival_s
@@ -1311,7 +1509,20 @@ class ContinuousBatchingScheduler:
                            evictions=getattr(pool, "evictions", 0),
                            preempted=preempted, swapped=swapped,
                            recomputed=recomputed,
-                           preempt_wasted_j=preempt_waste)
+                           preempt_wasted_j=preempt_waste,
+                           brownout_ticks=(gov.brownout_ticks
+                                           if gov is not None else 0),
+                           brownout_transitions=(gov.transitions
+                                                 if gov is not None else 0),
+                           cap_violation_ticks=cap_violations,
+                           brownout_forgone_j=forgone_j,
+                           level_dwell=(tuple(gov.dwell)
+                                        if gov is not None else ()),
+                           peak_window_w=(cap_ledger.peak_window_w
+                                          if cap_ledger is not None else 0.0),
+                           peak_budget_window_j=(
+                               bud_ledger.peak_window_j
+                               if bud_ledger is not None else 0.0))
 
 
 # ---------------------------------------------------------------------------

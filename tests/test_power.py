@@ -1,0 +1,253 @@
+"""Power envelope, DVFS cost adapter, rolling-ledger enforcement, and the
+stalled-tick energy accounting fix.
+
+ACCEPTANCE: the envelope is a pure deterministic function of (seed,
+scripted events); at clock fraction f ticks stretch by 1/f while dynamic
+power scales by f (``dvfs_power(u, 1) == step_power(u)`` keeps the
+unconstrained path bit-identical); ledger enforcement leaves NO compliance
+window over its cap; and a stalled tick's stretch tail is charged at idle
+power, not busy power.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.energy import DEFAULT_CHIP
+from repro.serving.engine import InferenceEngine, ServeConfig
+from repro.serving.faults import FaultInjector, FaultProfile, make_profile
+from repro.serving.load import poisson_stream
+from repro.serving.power import (
+    CapWindow,
+    PowerEnvelope,
+    RollingLedger,
+    ThermalEvent,
+)
+from repro.serving.scheduler import ContinuousBatchingScheduler, FixedCalibration
+from repro.configs import get_reduced_config
+
+CAL = FixedCalibration(step_s=0.004, prefill_base_s=0.001,
+                       prefill_per_tok_s=0.001, verify_per_tok_s=0.0001)
+
+
+def _virtual(arch="whisper-tiny", *, sc=None, **kw):
+    eng = InferenceEngine(get_reduced_config(arch), params=False,
+                          sc=sc or ServeConfig(max_batch=4, max_len=64))
+    return ContinuousBatchingScheduler(eng, execute=False, calibration=CAL,
+                                       policy="idle_waiting", **kw)
+
+
+# ---------------------------------------------------------------------------
+# envelope
+# ---------------------------------------------------------------------------
+def test_thermal_event_recovery_curve():
+    ev = ThermalEvent(start_s=1.0, frac=0.5, recover_s=2.0)
+    assert ev.clock_frac(0.5) == 1.0          # before onset
+    assert ev.clock_frac(1.0) == 0.5          # at onset
+    assert ev.clock_frac(2.0) == pytest.approx(0.75)  # halfway up the ramp
+    assert ev.clock_frac(3.0) == 1.0          # recovered
+    assert ThermalEvent(0.0, 0.3, math.inf).clock_frac(1e9) == 0.3  # permanent
+
+
+def test_envelope_min_composition_and_reset():
+    env = PowerEnvelope(events=(ThermalEvent(0.0, 0.8, math.inf),))
+    assert env.clock_frac(5.0) == 0.8
+    env.throttle(5.0, 0.5, 10.0)  # dynamic event undercuts the scripted one
+    assert env.clock_frac(5.0) == 0.5
+    env.reset()                   # dynamic gone, scripted survives
+    assert env.clock_frac(5.0) == 0.8
+    # the floor: a dynamic event can never stop the clock
+    env.throttle(0.0, 0.0, math.inf)
+    assert env.clock_frac(1.0) > 0.0
+
+
+def test_cap_windows_min_and_bounds():
+    env = PowerEnvelope(caps=(CapWindow(1.0, 3.0, 150.0),
+                              CapWindow(2.0, 4.0, 120.0)))
+    assert env.cap_w(0.5) == math.inf
+    assert env.cap_w(1.5) == 150.0
+    assert env.cap_w(2.5) == 120.0  # overlap: the tighter cap wins
+    assert env.cap_w(3.5) == 120.0
+    assert env.cap_w(4.5) == math.inf
+    with pytest.raises(ValueError):
+        PowerEnvelope(caps=(CapWindow(2.0, 1.0, 100.0),))
+    with pytest.raises(ValueError):
+        PowerEnvelope(window_s=0.0)
+
+
+def test_seeded_envelope_deterministic():
+    a = PowerEnvelope.seeded(7, horizon_s=10.0)
+    b = PowerEnvelope.seeded(7, horizon_s=10.0)
+    c = PowerEnvelope.seeded(8, horizon_s=10.0)
+    assert a.scripted == b.scripted and a.caps == b.caps
+    assert (a.scripted, a.caps) != (c.scripted, c.caps)
+    assert a.has_caps and a.caps[0].cap_w < DEFAULT_CHIP.p_peak_w
+
+
+# ---------------------------------------------------------------------------
+# DVFS power model
+# ---------------------------------------------------------------------------
+def test_dvfs_power_scaling():
+    chip = DEFAULT_CHIP
+    for u in (0.0, 0.3, 1.0):
+        assert chip.dvfs_power(u, 1.0) == chip.step_power(u)
+    # dynamic term scales with f, static term does not
+    assert chip.dvfs_power(1.0, 0.5) == pytest.approx(
+        chip.p_idle_w + (chip.p_peak_w - chip.p_idle_w) * 0.5)
+    assert chip.dvfs_power(1.0, 0.0) == chip.p_idle_w
+    # per-tick dynamic ENERGY is f-invariant: (base/f) * dyn*f == base * dyn
+    base = 0.004
+    dyn = lambda f: (chip.dvfs_power(1.0, f) - chip.p_idle_w) * base / f
+    assert dyn(0.25) == pytest.approx(dyn(1.0))
+
+
+def test_scheduler_clock_stretch():
+    """Under a permanent f=0.5 derate every busy tick takes 2x, so total
+    per-request service (latency sum) roughly doubles on a back-to-back
+    stream; tokens are untouched."""
+    reqs = poisson_stream(n=8, seed=1, rate_hz=1e6,  # all arrive at once
+                          prompt_lens=(4, 8), new_tokens=(4, 12))
+    base = _virtual().run(reqs)
+    env = PowerEnvelope(events=(ThermalEvent(0.0, 0.5, math.inf),))
+    slow = _virtual(power=env).run(reqs)
+    assert slow.time_s / base.time_s == pytest.approx(2.0, rel=0.01)
+    assert ({r.rid: r.tokens for r in slow.records}
+            == {r.rid: r.tokens for r in base.records})
+    # static energy doubles, dynamic unchanged -> strictly more total energy
+    assert slow.energy_j > base.energy_j
+
+
+# ---------------------------------------------------------------------------
+# rolling ledger
+# ---------------------------------------------------------------------------
+def test_ledger_window_accounting():
+    led = RollingLedger(1.0, floor_w=75.0)
+    led.add(0.0, 0.5, 200.0)
+    # conservative: unrecorded time counts at the floor
+    assert led.window_j(0.5) == pytest.approx(75.0 + 0.5 * 125.0)
+    led.add(0.5, 1.0, 75.0)   # idle adds no excess
+    assert led.window_j(1.0) == pytest.approx(75.0 + 0.5 * 125.0)
+    assert led.violates(1.0, cap_w=130.0)
+    assert not led.violates(1.0, cap_w=140.0)
+    # the busy segment rolls out of the window
+    led.add(1.0, 2.0, 75.0)
+    assert led.window_j(2.0) == pytest.approx(75.0)
+
+
+def test_ledger_idle_needed_exact_and_sound():
+    cap = 130.0
+    led = RollingLedger(1.0, cap_w=cap, floor_w=75.0)
+    led.add(0.0, 0.5, 200.0)
+    dur, busy = 0.3, 200.0
+    s = led.idle_needed(0.5, dur, busy)
+    assert s > 0.0
+    # exactly feasible after waiting s: the window ending at the new tick's
+    # end holds precisely the cap's worth of energy
+    led.add(0.5, 0.5 + s, 75.0)
+    led.add(0.5 + s, 0.5 + s + dur, busy)
+    assert led.window_j(0.5 + s + dur) <= cap * 1.0 * (1 + 1e-9)
+    assert led.window_j(0.5 + s + dur) == pytest.approx(cap * 1.0)
+    # and asking again for a fitting tick needs no idle
+    assert led.idle_needed(0.5 + s + dur, 0.0, busy) == 0.0
+
+
+def test_ledger_idle_needed_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    @given(st.integers(0, 2**32 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        cap = float(rng.uniform(90.0, 190.0))
+        led = RollingLedger(float(rng.uniform(0.2, 1.5)), cap_w=cap,
+                            floor_w=75.0)
+        t = 0.0
+        for _ in range(30):
+            dur = float(rng.uniform(0.01, 0.4))
+            busy = float(rng.uniform(75.0, 300.0))
+            s = led.idle_needed(t, dur, busy)
+            if s > 0:
+                led.add(t, t + s, 75.0)
+                t += s
+            led.add(t, t + dur, busy)
+            t += dur
+            # infeasible ticks (busy alone over the cap-window budget) are
+            # allowed to violate; everything else must fit
+            if (busy - 75.0) * min(dur, led.window_s) <= \
+                    (cap - 75.0) * led.window_s:
+                assert not led.violates(t), (seed, t)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# therm fault axis
+# ---------------------------------------------------------------------------
+def test_make_profile_therm_roundtrip():
+    p = make_profile("therm=0.25,thermf=0.6,thermt=24", seed=9)
+    assert p is not None and p.enabled
+    assert p.therm_rate == 0.25 and p.therm_frac == 0.6
+    assert p.therm_ticks == 24 and isinstance(p.therm_ticks, int)
+    assert p.seed == 9
+    with pytest.raises(ValueError):
+        make_profile("thermz=1.0")
+
+
+def test_thermal_draws_only_when_enabled():
+    """The therm axis consumes NO generator draws when disabled, so adding
+    it to the fault model cannot disturb historical profiles' sequences."""
+    base = FaultProfile(seed=5, stall_rate=0.3)
+    therm = FaultProfile(seed=5, stall_rate=0.3, therm_rate=0.5)
+    a, b = FaultInjector(base), FaultInjector(base)
+    seq_a = []
+    for _ in range(50):
+        assert a.thermal() is None          # interleaved no-op calls
+        seq_a.append(a.stall())
+    seq_b = [b.stall() for _ in range(50)]
+    assert seq_a == seq_b
+    # enabled axis is deterministic per seed and returns the profile's frac
+    c, d = FaultInjector(therm), FaultInjector(therm)
+    seq_c = [c.thermal() for _ in range(50)]
+    assert seq_c == [d.thermal() for _ in range(50)]
+    assert any(f == 0.5 for f in seq_c if f is not None)
+
+
+def test_therm_fault_creates_envelope_and_stretches():
+    """A therm-only profile auto-creates an envelope: same stream, same
+    seed, tokens identical, makespan strictly longer."""
+    reqs = poisson_stream(n=10, seed=2, rate_hz=1e6, prompt_lens=(4, 8),
+                          new_tokens=(8, 16))
+    base = _virtual().run(reqs)
+    prof = FaultProfile(seed=4, therm_rate=0.3, therm_frac=0.4, therm_ticks=32)
+    hot1 = _virtual(faults=prof).run(reqs)
+    hot2 = _virtual(faults=prof).run(reqs)
+    assert hot1.time_s == hot2.time_s  # seeded-deterministic
+    assert hot1.time_s > base.time_s
+    assert ({r.rid: r.tokens for r in hot1.records}
+            == {r.rid: r.tokens for r in base.records})
+
+
+# ---------------------------------------------------------------------------
+# the stalled-tick energy fix (satellite): stall tail at idle power
+# ---------------------------------------------------------------------------
+def test_stall_tail_charged_at_idle_power():
+    chip = DEFAULT_CHIP
+    factor = 4.0
+    prof = FaultProfile(seed=0, stall_rate=1.0, stall_factor=factor)
+    sc = ServeConfig(max_batch=1, max_len=64)  # util = 1 on every tick
+    reqs = poisson_stream(n=1, seed=1, rate_hz=10.0, prompt_lens=(4, 4),
+                          new_tokens=(4, 4))
+    rep = _virtual(sc=sc, faults=prof).run(reqs)
+    rec = rep.records[0]
+    # blocking prefill (no stall draw) + 3 decode ticks, every one stalled:
+    # busy part at step_power(1), the (factor-1) tail at p_idle
+    tp = CAL.prefill_s(1, rec.prompt_len)
+    step = CAL.step_s()
+    want = (chip.step_power(1.0) * tp
+            + 3 * (chip.step_power(1.0) * step
+                   + chip.p_idle_w * (factor - 1) * step))
+    assert rec.energy_j == pytest.approx(want)
+    # regression direction: the old accounting billed the whole stretched
+    # tick at busy power, which is strictly more
+    old = chip.step_power(1.0) * tp + 3 * chip.step_power(1.0) * factor * step
+    assert rec.energy_j < old
